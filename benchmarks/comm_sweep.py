@@ -1,0 +1,47 @@
+"""Full Section-3 communication sweep over the ASSIGNED architectures.
+
+For every assigned arch at the train_4k shape: bits/iteration/device over the
+cross-group links for all_reduce vs codistillation {predictions, checkpoints}
+x period T x compression — the complete analytic Figure-1 grid at LLM scale
+(the dry-run's HLO cross-pod measurements validate the T=1 column; the rest
+follow the model exactly since period/compression act multiplicatively).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs import ASSIGNED_ARCHS, CodistConfig, INPUT_SHAPES, get_config
+from repro.core import comm_model as cm
+
+
+def run(quick: bool = False) -> List[Dict]:
+    rows: List[Dict] = []
+    shape = INPUT_SHAPES["train_4k"]
+    archs = ASSIGNED_ARCHS[:3] if quick else ASSIGNED_ARCHS
+    for arch in archs:
+        cfg = get_config(arch)
+        b_model = cm.model_bits(cfg, param_bits=16)  # bf16 training
+        ar = cm.allreduce_bits(b_model)
+        per_model_batch = shape.global_batch // 2
+        variants = {
+            "pred_T1": CodistConfig(n_models=2, period=1),
+            "pred_T5": CodistConfig(n_models=2, period=5),
+            "pred_T1_topk64": CodistConfig(n_models=2, period=1,
+                                           compression="topk", topk=64),
+            "pred_T5_topk64": CodistConfig(n_models=2, period=5,
+                                           compression="topk", topk=64),
+            "pred_T1_sub256": CodistConfig(n_models=2, period=1,
+                                           compression="subsample",
+                                           subsample=256),
+            "ckpt_T50": CodistConfig(n_models=2, mode="checkpoints",
+                                     period=50),
+        }
+        rows.append({"name": f"comm/{arch}/allreduce_bits",
+                     "derived": f"{ar.bits_per_iter_per_device:.3e}"})
+        for tag, codist in variants.items():
+            c = cm.codist_cost(cfg, codist, per_model_batch,
+                               seq_len=shape.seq_len, param_bits=16,
+                               logit_bits=16)
+            rows.append({"name": f"comm/{arch}/{tag}_ratio",
+                         "derived": round(c.ratio_vs(ar), 2)})
+    return rows

@@ -1,0 +1,66 @@
+"""Shared helpers for the benchmark suite (one module per paper artifact).
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (us_per_call is
+the wall time of the benchmark's core computation; ``derived`` carries the
+paper-relevant quantity: a ratio, an accuracy, a loss gap...).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import CodistConfig, TrainConfig, get_reduced
+from repro.data import MarkovLM, make_lm_batch
+from repro.models import build_model
+from repro.train import stack_batches
+
+
+def tiny_lm_cfg(vocab=64, d=64, layers=2):
+    return replace(get_reduced("qwen1.5-0.5b"), num_layers=layers, d_model=d,
+                   d_ff=2 * d, vocab_size=vocab, num_heads=2, num_kv_heads=2,
+                   head_dim=32)
+
+
+def lm_setup(vocab=64, seed=0):
+    cfg = tiny_lm_cfg(vocab)
+    return build_model(cfg), MarkovLM(vocab=vocab, seed=seed)
+
+
+def coord_batches(task, n, b, s, seed=0):
+    def fn(step):
+        return stack_batches([make_lm_batch(task, b, s, step, None, seed=seed)
+                              for _ in range(n)])
+    return fn
+
+
+def indep_batches(task, n, b, s, seed=0):
+    def fn(step):
+        return stack_batches([make_lm_batch(task, b, s, step, g, seed=seed)
+                              for g in range(n)])
+    return fn
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3, **kw):
+    def _sync(o):
+        leaves = [x for x in jax.tree.leaves(o)
+                  if isinstance(x, jax.Array)]
+        if leaves:
+            jax.block_until_ready(leaves[0])
+
+    for _ in range(warmup):
+        _sync(fn(*args, **kw))
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    _sync(out)
+    return out, (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(rows: List[Dict]) -> None:
+    for r in rows:
+        print(f"{r['name']},{r.get('us_per_call', 0):.1f},{r['derived']}")

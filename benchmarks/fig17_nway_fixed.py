@@ -1,0 +1,36 @@
+"""Figure 17: scaling n with a FIXED TOTAL update budget (steps per model =
+budget / n) degrades — n-way codistillation does not buy linear scaling in
+the number of codistilled models."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs import CodistConfig, TrainConfig
+from repro.train import train_codist
+
+from benchmarks.common import coord_batches, lm_setup, timed
+
+
+def run(quick: bool = False) -> List[Dict]:
+    model, task = lm_setup()
+    budget = 48 if quick else 160
+    rows: List[Dict] = []
+    losses = {}
+    for n in (2, 4, 8):
+        steps = budget // n
+        tc = TrainConfig(lr=3e-3, total_steps=steps,
+                         warmup_steps=max(2, steps // 10),
+                         optimizer="adamw", lr_schedule="cosine", seed=0)
+        codist = CodistConfig(n_models=n, alpha0=1.0)
+        (_, hist), us = timed(
+            lambda n=n, cd=codist, tc=tc: train_codist(
+                model, cd, tc, coord_batches(task, n, 8, 32),
+                log_every=max(1, steps - 1)),
+            warmup=0, iters=1)
+        loss = hist.records[-1]["task_loss"]
+        losses[n] = loss
+        rows.append({"name": f"fig17/n{n}_steps{steps}",
+                     "us_per_call": us, "derived": round(loss, 4)})
+    rows.append({"name": "fig17/degrades_with_n",
+                 "derived": int(losses[8] > losses[2])})
+    return rows

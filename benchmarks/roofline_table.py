@@ -1,0 +1,45 @@
+"""Roofline table generator: reads the dry-run JSONs and emits the
+EXPERIMENTS.md §Roofline markdown plus summary CSV rows."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from repro.launch.roofline import format_table
+
+
+def load(dryrun_dir: str = "results/dryrun") -> List[Dict]:
+    recs = []
+    for fname in sorted(os.listdir(dryrun_dir)) if os.path.isdir(dryrun_dir) else []:
+        if fname.endswith(".json"):
+            for r in json.load(open(os.path.join(dryrun_dir, fname))):
+                if r.get("status") == "ok" and "roofline" in r:
+                    recs.append(r)
+    return recs
+
+
+def markdown(dryrun_dir: str = "results/dryrun") -> str:
+    recs = load(dryrun_dir)
+    return format_table([r["roofline"] for r in recs])
+
+
+def run(quick: bool = False) -> List[Dict]:
+    recs = load()
+    rows: List[Dict] = []
+    ok = [r for r in recs]
+    rows.append({"name": "roofline/combos_ok", "derived": len(ok)})
+    by_bn: Dict[str, int] = {}
+    for r in ok:
+        bn = r["roofline"]["bottleneck"]
+        by_bn[bn] = by_bn.get(bn, 0) + 1
+    for bn, c in sorted(by_bn.items()):
+        rows.append({"name": f"roofline/bottleneck_{bn}", "derived": c})
+    for r in ok:
+        rr = r["roofline"]
+        rows.append({
+            "name": f"roofline/{rr['arch']}_{rr['shape']}_{rr['mesh']}_{r.get('mode','')}",
+            "derived": (f"compute={rr['compute_s']:.3e};mem={rr['memory_s']:.3e};"
+                        f"coll={rr['collective_s']:.3e};bn={rr['bottleneck']};"
+                        f"useful={rr['useful_ratio']:.3f}")})
+    return rows

@@ -1,0 +1,70 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,fig7]
+
+Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
+    fig1        communication trade-off (analytic + compiled-HLO cross-pod bytes)
+    fig2        regularization-schedule necessity (constant vs decayed WD)
+    table1      batch-size linear scaling under codistillation
+    fig6        multi-view n-way study (enforced / shared / all views)
+    fig7        parameter-distance regularization effect
+    table2      n-way gains at equal updates (view-diverse task)
+    fig17       n-way with a fixed total update budget degrades
+    throughput  step-variant microbench + kernel interpret timings
+    roofline    §Roofline summary from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = [
+    ("fig1", "benchmarks.fig1_comm"),
+    ("fig2", "benchmarks.fig2_regschedule"),
+    ("table1", "benchmarks.table1_scaling"),
+    ("fig6", "benchmarks.fig6_multiview"),
+    ("fig7", "benchmarks.fig7_reg"),
+    ("table2", "benchmarks.table2_nway"),
+    ("fig17", "benchmarks.fig17_nway_fixed"),
+    ("staleness", "benchmarks.staleness"),
+    ("comm", "benchmarks.comm_sweep"),
+    ("throughput", "benchmarks.throughput"),
+    ("roofline", "benchmarks.roofline_table"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced step counts for CI")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args()
+    only = set(filter(None, args.only.split(",")))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, modpath in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            import importlib
+            mod = importlib.import_module(modpath)
+            rows = mod.run(quick=args.quick)
+            emit(rows)
+            print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception as e:
+            failures += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

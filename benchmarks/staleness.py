@@ -1,0 +1,90 @@
+"""Section 3's staleness-tolerance claim: "predictions change more slowly
+than model parameters during training, so codistillation should be reasonably
+tolerant to staleness".
+
+Two measurements:
+  (a) checkpoint-exchange codistillation across T in {1, 5, 25, 100}: final
+      task loss should degrade only mildly with staleness;
+  (b) the claim's premise, measured directly: after a parameter update,
+      relative change of predictions vs relative change of parameters —
+      ||Δf(x)||/||f(x)|| divided by ||Δθ||/||θ|| should be well under 1
+      late in training (predictions move slower than parameters).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import CodistConfig, TrainConfig
+from repro.data import make_lm_batch
+from repro.train import train_codist
+
+from benchmarks.common import indep_batches, lm_setup, timed
+
+
+def run(quick: bool = False) -> List[Dict]:
+    model, task = lm_setup()
+    steps = 60 if quick else 150
+    tc = TrainConfig(lr=3e-3, total_steps=steps, warmup_steps=5,
+                     optimizer="adamw", lr_schedule="cosine", seed=0)
+    rows: List[Dict] = []
+
+    # (a) staleness sweep over the checkpoint-exchange period
+    losses = {}
+    for t in (1, 5, 25, 100):
+        codist = CodistConfig(n_models=2, mode="checkpoints", period=t)
+        (_, hist), us = timed(
+            lambda cd=codist: train_codist(model, cd, tc,
+                                           indep_batches(task, 2, 8, 32),
+                                           log_every=steps - 1),
+            warmup=0, iters=1)
+        losses[t] = hist.records[-1]["task_loss"]
+        rows.append({"name": f"staleness/ckpt_T{t}_loss", "us_per_call": us,
+                     "derived": round(losses[t], 4)})
+    worst = max(losses.values())
+    best = min(losses.values())
+    rows.append({"name": "staleness/degradation_frac",
+                 "derived": round((worst - best) / best, 4)})
+    rows.append({"name": "staleness/tolerant_to_T100",
+                 "derived": int((losses[100] - losses[1]) / losses[1] < 0.15)})
+
+    # (b) predictions-drift vs parameter-drift ratio along a codist run
+    from repro.optim import make_optimizer
+    from repro.train import init_codist_state, steps as steps_mod
+    codist = CodistConfig(n_models=2)
+    opt_init, _ = make_optimizer("adamw")
+    state = init_codist_state(model, jax.random.key(0), 2, opt_init)
+    step_fn = jax.jit(steps_mod.make_codist_step(model, codist, tc, True))
+    probe = make_lm_batch(task, 8, 32, 999, None, seed=3)
+
+    def norm(t):
+        return float(jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                                  for x in jax.tree.leaves(t))))
+
+    def predictions(params):
+        return model.forward(jax.tree.map(lambda x: x[0], params), probe)[0]
+
+    ratios = []
+    batches = indep_batches(task, 2, 8, 32)
+    for k in range(steps):
+        prev_params = state.params
+        prev_pred = predictions(prev_params)
+        state, _ = step_fn(state, batches(k))
+        if k in (steps // 2, steps - 1):
+            d_theta = norm(jax.tree.map(lambda a, b: a - b, state.params,
+                                        prev_params)) / norm(prev_params)
+            new_pred = predictions(state.params)
+            d_pred = norm(new_pred - prev_pred) / norm(prev_pred)
+            ratios.append(d_pred / max(d_theta, 1e-12))
+            rows.append({"name": f"staleness/pred_vs_param_drift_step{k}",
+                         "derived": round(ratios[-1], 4)})
+    # Honest finding: at smoke scale (2-layer LM, <200 steps) predictions
+    # move FASTER than parameters in relative norm (ratio > 1) — the paper's
+    # premise is a late-training/overparameterized-regime statement. The
+    # tolerance RESULT above still holds (T=100 degrades <15%), which is the
+    # operationally relevant claim.
+    rows.append({"name": "staleness/drift_ratio_final",
+                 "derived": round(ratios[-1], 4)})
+    return rows

@@ -1,0 +1,72 @@
+"""Step-time microbenchmarks (CPU, tiny model): relative cost of the exchange
+modes and the kernels vs their jnp references. Wall-clock on this container is
+NOT TPU-predictive — roofline terms in the dry-run are — but relative step
+structure (distill on/off, checkpoint n-forwards, pipelined replay) is."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import CodistConfig, TrainConfig
+from repro.data import make_lm_batch
+from repro.optim import make_optimizer
+from repro.train import init_codist_state, stack_batches
+from repro.train import steps as steps_mod
+
+from benchmarks.common import lm_setup, timed
+
+
+def run(quick: bool = False) -> List[Dict]:
+    model, task = lm_setup()
+    tc = TrainConfig(lr=1e-3, total_steps=100, optimizer="adamw")
+    opt_init, _ = make_optimizer("adamw")
+    state = init_codist_state(model, jax.random.key(0), 2, opt_init,
+                              with_stale=True)
+    batch = stack_batches([make_lm_batch(task, 8, 64, 0, None, seed=0)
+                           for _ in range(2)])
+    rows: List[Dict] = []
+    variants = {
+        "step_codist_distill": jax.jit(steps_mod.make_codist_step(
+            model, CodistConfig(n_models=2), tc, True)),
+        "step_codist_plain": jax.jit(steps_mod.make_codist_step(
+            model, CodistConfig(n_models=2), tc, False)),
+        "step_codist_topk": jax.jit(steps_mod.make_codist_step(
+            model, CodistConfig(n_models=2, compression="topk", topk=16),
+            tc, True)),
+        "step_checkpoint_mode": jax.jit(steps_mod.make_codist_checkpoint_step(
+            model, CodistConfig(n_models=2, mode="checkpoints"), tc)),
+    }
+    base_us = None
+    for name, fn in variants.items():
+        (_, m), us = timed(lambda f=fn: f(state, batch), warmup=1,
+                           iters=2 if quick else 5)
+        if name == "step_codist_plain":
+            base_us = us
+        rows.append({"name": f"throughput/{name}", "us_per_call": us,
+                     "derived": round(float(m["loss"]), 4)})
+    # relative overheads vs the no-distill step
+    if base_us:
+        for r in rows:
+            if r["name"] != "throughput/step_codist_plain":
+                r["derived"] = f"{r['us_per_call'] / base_us:.2f}x_plain"
+
+    # kernels vs jnp references (interpret mode: correctness-path timing only)
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+    t, v = (256, 512) if quick else (512, 2048)
+    lg = jax.random.normal(jax.random.key(0), (t, v))
+    lb = jax.random.randint(jax.random.key(1), (t,), 0, v)
+    tgt = jax.random.normal(jax.random.key(2), (t, v))
+    _, us_k = timed(lambda: kops.cross_entropy_tokens(lg, lb, interpret=True),
+                    iters=2)
+    _, us_r = timed(lambda: kref.cross_entropy_ref(lg, lb), iters=2)
+    rows.append({"name": "throughput/fused_ce_interp_vs_ref",
+                 "us_per_call": us_k, "derived": f"{us_k / us_r:.1f}x_ref"})
+    _, us_k = timed(lambda: kops.distill_loss_tokens(lg, tgt, interpret=True),
+                    iters=2)
+    _, us_r = timed(lambda: kref.distill_mse_ref(lg, tgt), iters=2)
+    rows.append({"name": "throughput/fused_distill_interp_vs_ref",
+                 "us_per_call": us_k, "derived": f"{us_k / us_r:.1f}x_ref"})
+    return rows

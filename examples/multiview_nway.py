@@ -1,0 +1,41 @@
+"""Section-5.1 multi-view study: when does n-way (n>2) codistillation help?
+
+    PYTHONPATH=src python examples/multiview_nway.py
+
+Reproduces the Figure-6 pattern on the controlled synthetic multi-view task:
+models restricted to DIFFERENT views gain monotonically with n; models
+sharing ONE view do not (beyond the small n=2 bump).
+"""
+from repro.configs import CodistConfig, TrainConfig
+from repro.models.mlp import MLP, MLPConfig
+from repro.train import train_codist
+
+import sys
+sys.path.insert(0, ".")
+from benchmarks.fig6_multiview import TASK, _batches, _eval_acc  # noqa: E402
+
+STEPS = 400
+model = MLP(MLPConfig(in_dim=TASK.dim, hidden=(128, 128),
+                      num_classes=TASK.num_classes))
+tc = TrainConfig(lr=3e-3, total_steps=STEPS, warmup_steps=5,
+                 optimizer="adamw", lr_schedule="cosine", seed=0)
+
+results = {}
+for scenario in ("enforced", "shared"):
+    print(f"== scenario: {scenario} "
+          f"({'models see different views' if scenario == 'enforced' else 'all models share one view'}) ==")
+    for n in (1, 2, 4, 8):
+        codist = CodistConfig(n_models=n, alpha0=2.0 if n > 1 else 0.0,
+                              distill_loss="kl")
+        state, _ = train_codist(model, codist, tc, _batches(n, scenario),
+                                log_every=STEPS - 1)
+        acc = _eval_acc(model, state, n, scenario)
+        results[(scenario, n)] = acc
+        print(f"  n={n}: held-out accuracy {acc:.4f}")
+
+gain_e = results[("enforced", 8)] - results[("enforced", 1)]
+gain_s = results[("shared", 8)] - results[("shared", 1)]
+print(f"\nenforced-views gain (n=8 vs n=1): {gain_e:+.4f}")
+print(f"shared-view   gain (n=8 vs n=1): {gain_s:+.4f}")
+print("multi-view hypothesis confirmed" if gain_e > gain_s + 0.02
+      else "WARN: expected larger enforced-view gain")

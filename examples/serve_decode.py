@@ -1,0 +1,31 @@
+"""Serve a small model with batched requests: prefill once, decode in a
+batched loop — exercising the KV-cache (dense), recurrent-state (rwkv) and
+hybrid cache paths through the same Engine.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+
+from repro.configs import get_reduced
+from repro.models import build_model
+from repro.serve import Engine
+
+for arch in ("qwen1.5-0.5b", "rwkv6-1.6b", "jamba-v0.1-52b"):
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    engine = Engine(model, params)
+    b, prompt_len, new = 4, 32, 16
+    batch = {"tokens": jax.random.randint(jax.random.key(1),
+                                          (b, prompt_len), 0,
+                                          cfg.padded_vocab)}
+    t0 = time.time()
+    out = engine.generate(batch, max_new_tokens=new, temperature=0.8, seed=0)
+    dt = time.time() - t0
+    assert out.tokens.shape == (b, prompt_len + new)
+    print(f"{arch:16s} {b} seqs x {new} new tokens in {dt:5.1f}s "
+          f"({b * new / dt:6.1f} tok/s) sample: "
+          f"{out.tokens[0, prompt_len:prompt_len + 8].tolist()}")
+print("PASS")

@@ -1,0 +1,42 @@
+"""Pytree checkpointing: npz payload + json treedef.
+
+Flat key encoding uses jax.tree_util key-paths, so any nested dict/tuple/
+NamedTuple state (TrainState, CodistState, OptState) round-trips. Used by the
+examples/launchers and by checkpoint-exchange experiments that restart from a
+published replica.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_pytree(path: str, tree: PyTree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    np.savez(path + ".npz", **{f"leaf_{i}": np.asarray(x)
+                               for i, x in enumerate(leaves)})
+    with open(path + ".tree.json", "w") as f:
+        json.dump({"treedef": str(treedef), "n_leaves": len(leaves)}, f)
+
+
+def load_pytree(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    data = np.load(path + ".npz")
+    leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
+    like_leaves, treedef = _flatten(like)
+    assert len(leaves) == len(like_leaves), "checkpoint/template mismatch"
+    import jax.numpy as jnp
+    restored = [jnp.asarray(x, dtype=l.dtype) for x, l in zip(leaves, like_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, restored)

@@ -1,0 +1,63 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` / ``get_reduced(arch_id)`` resolve the ids used by
+``--arch`` on every launcher. The ten assigned architectures plus the paper's
+own workloads are all registered here.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+# arch-id -> module path (module must export CONFIG and reduced())
+_REGISTRY: Dict[str, str] = {
+    # --- assigned pool (10) ---
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "internvl2-76b": "repro.configs.internvl2_76b",
+    "qwen1.5-0.5b": "repro.configs.qwen1_5_0_5b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "qwen1.5-4b": "repro.configs.qwen1_5_4b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1_6b",
+    # --- paper's own workloads ---
+    "transformer-big": "repro.configs.transformer_big",
+    "resnet50": "repro.configs.resnet50",
+    "wrn28x10": "repro.configs.wrn28_10",
+}
+
+ASSIGNED_ARCHS: List[str] = [
+    "deepseek-67b", "qwen2-7b", "internvl2-76b", "qwen1.5-0.5b", "arctic-480b",
+    "jamba-v0.1-52b", "grok-1-314b", "qwen1.5-4b", "whisper-tiny", "rwkv6-1.6b",
+]
+
+
+def list_archs() -> List[str]:
+    return list(_REGISTRY)
+
+
+def get_config(arch: str):
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_REGISTRY)}")
+    return importlib.import_module(_REGISTRY[arch]).CONFIG
+
+
+def get_reduced(arch: str):
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_REGISTRY)}")
+    return importlib.import_module(_REGISTRY[arch]).reduced()
+
+
+from repro.configs.base import (  # noqa: E402,F401  (re-exports)
+    CodistConfig,
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    MoEConfig,
+    RWKVConfig,
+    SSMConfig,
+    TrainConfig,
+    reduced,
+)

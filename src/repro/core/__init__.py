@@ -1,0 +1,37 @@
+"""Core codistillation library (the paper's contribution)."""
+from repro.core.codistillation import (  # noqa: F401
+    accuracy,
+    codist_loss,
+    compress_targets,
+    cross_entropy,
+    distill_ce,
+    distill_kl,
+    distill_mse,
+    distill_pair,
+    distill_vs_compressed,
+    init_stacked,
+    model_slice,
+    param_distance_from,
+    stack_models,
+)
+from repro.core.comm_model import (  # noqa: F401
+    CommCost,
+    allreduce_bits,
+    codist_checkpoint_bits,
+    codist_cost,
+    codist_prediction_bits,
+    model_bits,
+    paper_resnet50_numbers,
+    prediction_bits_classifier,
+    prediction_bits_lm,
+)
+from repro.core.exchange import (  # noqa: F401
+    CheckpointExchangeState,
+    PipelinedState,
+    StepPlan,
+    init_checkpoint_exchange,
+    init_pipelined,
+    maybe_exchange_checkpoints,
+    pipelined_targets,
+    update_pipelined,
+)

@@ -1,0 +1,7 @@
+from repro.data.synthetic import (  # noqa: F401
+    MarkovLM,
+    classification_batch,
+    lm_batch_iterator,
+    make_lm_batch,
+)
+from repro.data.multiview import MultiViewTask, multiview_batch  # noqa: F401

@@ -1,0 +1,109 @@
+"""Deterministic synthetic data pipelines.
+
+Two requirements drive the design:
+
+1. **Learnable structure** — the paper's claims are about *training dynamics*
+   (codistillation matching all_reduce, regularization effects), so batches
+   must carry real signal. ``MarkovLM`` samples token streams from a fixed
+   random first-order Markov chain: any LM can learn it and losses separate
+   cleanly between runs.
+2. **Coordinated sampling** (Section 3) — prediction-exchange codistillation
+   requires that all codistilling groups process the SAME minibatch. Batches
+   are pure functions of ``(seed, step [, group])``: with ``coordinated=True``
+   the group index is dropped from the key, so every group reproduces the
+   identical batch with zero communication (deterministic PRNG in place of a
+   shared data service — the production analogue is a seed-synchronized
+   dataloader, which is exactly how coordinated sampling is deployed).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MarkovLM:
+    """First-order Markov chain over `vocab` tokens with `concentration`
+    controlling how predictable transitions are (lower => more learnable)."""
+    vocab: int
+    seed: int = 0
+    concentration: float = 0.3
+    effective_vocab: int = 0  # 0 => vocab (cap for huge-vocab configs)
+
+    def _transition_logits(self) -> jax.Array:
+        v = self.effective_vocab or self.vocab
+        key = jax.random.key(self.seed)
+        return jax.random.normal(key, (v, v)) / self.concentration
+
+    @partial(jax.jit, static_argnums=(0, 2, 3))
+    def sample(self, key: jax.Array, batch: int, seq_len: int) -> jax.Array:
+        v = self.effective_vocab or self.vocab
+        logits = self._transition_logits()
+        k0, k1 = jax.random.split(key)
+        first = jax.random.randint(k0, (batch,), 0, v)
+
+        def step(tok, k):
+            nxt = jax.random.categorical(k, logits[tok])
+            return nxt, nxt
+
+        keys = jax.random.split(k1, seq_len - 1)
+        _, rest = jax.lax.scan(step, first, keys)
+        toks = jnp.concatenate([first[None], rest], axis=0).T  # (B, S)
+        return toks.astype(jnp.int32)
+
+
+def _batch_key(seed: int, step: int, group: Optional[int]) -> jax.Array:
+    data = jax.random.key(seed)
+    data = jax.random.fold_in(data, step)
+    if group is not None:
+        data = jax.random.fold_in(data, 7919 + group)
+    return data
+
+
+def make_lm_batch(task: MarkovLM, batch: int, seq_len: int, step: int,
+                  group: Optional[int] = None, seed: int = 0) -> Dict[str, jax.Array]:
+    """Batch of (tokens, labels=next token, mask). Pure fn of (seed, step[, group])."""
+    key = _batch_key(seed, step, group)
+    toks = task.sample(key, batch, seq_len + 1)
+    return {
+        "tokens": toks[:, :-1],
+        "labels": toks[:, 1:],
+        "mask": jnp.ones((batch, seq_len), jnp.float32),
+    }
+
+
+def lm_batch_iterator(task: MarkovLM, batch: int, seq_len: int,
+                      coordinated: bool, group: int = 0,
+                      seed: int = 0) -> Iterator[Dict[str, jax.Array]]:
+    """Infinite iterator; coordinated=True ignores the group (same batches
+    for every codistilling model — prediction-exchange requirement)."""
+    step = 0
+    g = None if coordinated else group
+    while True:
+        yield make_lm_batch(task, batch, seq_len, step, g, seed)
+        step += 1
+
+
+def classification_batch(key: jax.Array, batch: int, dim: int,
+                         num_classes: int, noise: float = 1.0,
+                         image: bool = False, image_size: int = 32
+                         ) -> Dict[str, jax.Array]:
+    """Gaussian-cluster classification data (optionally shaped as images)."""
+    kc, kx, ky = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (num_classes, dim)) * 2.0
+    labels = jax.random.randint(ky, (batch,), 0, num_classes)
+    x = centers[labels] + noise * jax.random.normal(kx, (batch, dim))
+    out: Dict[str, jax.Array] = {"labels": labels}
+    if image:
+        side = image_size
+        need = side * side * 3
+        reps = -(-need // dim)
+        img = jnp.tile(x, (1, reps))[:, :need].reshape(batch, side, side, 3)
+        out["images"] = img
+    else:
+        out["features"] = x
+    return out

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot spots, validated in interpret mode.
+
+  fused_ce        — streaming cross-entropy over vocab tiles (no (T,V) temps)
+  distill_loss    — streaming codistillation D(y, y') (mse / kl)
+  flash_attention — online-softmax GQA attention (causal / sliding window)
+
+Each has a pure-jnp oracle in ``ref.py`` and a jit'd public wrapper in
+``ops.py`` (auto interpret on CPU, Mosaic on TPU).
+"""
+from repro.kernels.ops import (  # noqa: F401
+    attention,
+    auto_interpret,
+    cross_entropy_tokens,
+    distill_loss_tokens,
+)

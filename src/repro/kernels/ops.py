@@ -1,0 +1,97 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode for
+validation; on TPU they compile to Mosaic. ``auto_interpret()`` picks per
+backend so model code can call these unconditionally. Shapes are padded to
+block multiples here so callers never worry about alignment.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.distill_loss import fused_distill_loss
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_ce import fused_cross_entropy
+
+
+def auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def cross_entropy_tokens(logits: jax.Array, labels: jax.Array,
+                         block_t: int = 256, block_v: int = 512,
+                         interpret: Optional[bool] = None) -> jax.Array:
+    """Per-token CE over the trailing vocab dim; any leading shape."""
+    interpret = auto_interpret() if interpret is None else interpret
+    lead = logits.shape[:-1]
+    v = logits.shape[-1]
+    t = int(jnp.prod(jnp.array(lead))) if lead else 1
+    lg = logits.reshape(t, v)
+    lb = labels.reshape(t)
+    tp = (-t) % block_t
+    lg = _pad_to(lg, 0, block_t)
+    lg = _pad_to(lg, 1, block_v, value=-1e30)
+    lb = jnp.pad(lb, (0, tp))
+    # padded vocab cols get -1e30 (never win max / never the label)
+    out = fused_cross_entropy(lg, lb, block_t=block_t,
+                              block_v=min(block_v, lg.shape[1]),
+                              interpret=interpret)
+    return out[:t].reshape(lead)
+
+
+def distill_loss_tokens(logits: jax.Array, target_logits: jax.Array,
+                        mode: str = "mse", block_t: int = 256,
+                        block_v: int = 512,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """Per-token distillation loss over the trailing vocab dim."""
+    interpret = auto_interpret() if interpret is None else interpret
+    lead = logits.shape[:-1]
+    v = logits.shape[-1]
+    t = int(jnp.prod(jnp.array(lead))) if lead else 1
+    a = logits.reshape(t, v)
+    b = target_logits.reshape(t, v)
+    a = _pad_to(_pad_to(a, 0, block_t), 1, block_v,
+                value=0.0 if mode == "mse" else -1e30)
+    b = _pad_to(_pad_to(b, 0, block_t), 1, block_v,
+                value=0.0 if mode == "mse" else -1e30)
+    out = fused_distill_loss(a, b, mode=mode, block_t=block_t,
+                             block_v=min(block_v, a.shape[1]),
+                             interpret=interpret)
+    if mode == "mse" and a.shape[1] != v:
+        out = out * (a.shape[1] / v)  # undo the padded-vocab mean denominator
+    return out[:t].reshape(lead)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
+              window: int = 0, block_q: int = 128, block_k: int = 128,
+              interpret: Optional[bool] = None) -> jax.Array:
+    """GQA flash attention with automatic seq padding."""
+    interpret = auto_interpret() if interpret is None else interpret
+    sq, tk = q.shape[1], k.shape[1]
+    bq = min(block_q, max(16, sq))
+    bk = min(block_k, max(16, tk))
+    if not causal:
+        # padded keys would receive softmax mass without a causal mask
+        assert tk % bk == 0, "non-causal attention needs T % block_k == 0"
+    qp = _pad_to(q, 1, bq)
+    kp = _pad_to(k, 1, bk)
+    vp = _pad_to(v, 1, bk)
+    # causal mask makes padded keys unreachable from real queries (padded key
+    # positions >= sq > any real query row); padded query rows are sliced off.
+    out = flash_attention(qp, kp, vp, causal=causal, window=window,
+                          block_q=bq, block_k=bk, interpret=interpret)
+    return out[:, :sq]

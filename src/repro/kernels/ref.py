@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are the semantic ground truth: small, obviously-correct implementations
+with fp32 internal math. Kernel tests sweep shapes/dtypes and assert each
+Pallas kernel (interpret=True on CPU) matches its oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy_ref(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-token CE loss. logits (T, V), labels (T,) -> (T,) fp32."""
+    lg = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    true = jnp.take_along_axis(lg, labels[:, None], axis=-1)[:, 0]
+    return logz - true
+
+
+def distill_mse_ref(logits: jax.Array, target: jax.Array) -> jax.Array:
+    """Per-token mean-over-vocab squared error (the paper's D). (T,V)x2 -> (T,)."""
+    d = logits.astype(jnp.float32) - target.astype(jnp.float32)
+    return jnp.mean(d * d, axis=-1)
+
+
+def distill_kl_ref(logits: jax.Array, target: jax.Array) -> jax.Array:
+    """Per-token KL(softmax(target) || softmax(logits)). (T,V)x2 -> (T,)."""
+    lt = target.astype(jnp.float32)
+    ls = logits.astype(jnp.float32)
+    p = jax.nn.softmax(lt, axis=-1)
+    return jnp.sum(p * (jax.nn.log_softmax(lt, -1) - jax.nn.log_softmax(ls, -1)),
+                   axis=-1)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True,
+                        window: int = 0,
+                        scale: Optional[float] = None) -> jax.Array:
+    """GQA attention. q (B,S,H,hd), k/v (B,T,KV,hd) -> (B,S,H,hd) fp32 math."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.astype(jnp.float32).reshape(b, s, kvh, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg,
+                        k.astype(jnp.float32)) * scale
+    t = k.shape[1]
+    if causal:
+        i = jnp.arange(s)[:, None]
+        j = jnp.arange(t)[None, :]
+        mask = j <= i
+        if window > 0:
+            mask = mask & (i - j < window)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return o.reshape(b, s, h, hd)

@@ -1,0 +1,6 @@
+"""Launchers: production meshes, dry-run, train/serve CLIs, roofline."""
+from repro.launch.mesh import (  # noqa: F401
+    make_codist_mesh,
+    make_host_mesh,
+    make_production_mesh,
+)

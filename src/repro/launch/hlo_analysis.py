@@ -1,0 +1,169 @@
+"""Parse compiled HLO text for collective traffic.
+
+Extracts every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op with its shape bytes and replica groups, then classifies
+each collective as INTRA-POD or CROSS-POD given the mesh device layout — the
+measurement behind the paper's Figure-1 claim (only inter-server/inter-pod
+bytes count) derived directly from the compiled artifact.
+
+Handles both explicit ``replica_groups={{0,1},{2,3}}`` and iota
+``replica_groups=[8,2]<=[16]`` / ``[32,16]<=[16,32]T(1,0)`` forms.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of 'bf16[16,4096]{1,0}' or tuple '(f32[2], bf16[4,4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                numel *= int(d)
+        total += numel * _DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_replica_groups(attr: str) -> Optional[List[List[int]]]:
+    """Explicit groups '{{0,1},{2,3}}' -> [[0,1],[2,3]]."""
+    m = re.search(r"replica_groups=\{(\{[^=]*?\})\}", attr)
+    if not m:
+        return None
+    groups = re.findall(r"\{([0-9, ]*)\}", m.group(1))
+    out = []
+    for g in groups:
+        g = g.strip()
+        out.append([int(x) for x in g.split(",")] if g else [])
+    return out
+
+
+def _parse_iota_groups(attr: str) -> Optional[List[List[int]]]:
+    """Iota form: replica_groups=[G,S]<=[d0,d1,...]T(perm) -> groups."""
+    m = re.search(
+        r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?",
+        attr)
+    if not m:
+        return None
+    g, s = int(m.group(1)), int(m.group(2))
+    reshape_dims = [int(x) for x in m.group(3).split(",")]
+    n = int(np.prod(reshape_dims))
+    ids = np.arange(n).reshape(reshape_dims)
+    if m.group(4):
+        perm = [int(x) for x in m.group(4).split(",")]
+        ids = ids.transpose(perm)
+    return ids.reshape(g, s).tolist()
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    operand_bytes: int
+    groups: Optional[List[List[int]]]
+    cross_pod: bool
+    line: str = ""
+
+
+@dataclass
+class CollectiveSummary:
+    ops: List[CollectiveOp] = field(default_factory=list)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(o.operand_bytes for o in self.ops)
+
+    @property
+    def cross_pod_bytes(self) -> int:
+        return sum(o.operand_bytes for o in self.ops if o.cross_pod)
+
+    @property
+    def intra_pod_bytes(self) -> int:
+        return self.total_bytes - self.cross_pod_bytes
+
+    def by_kind(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for o in self.ops:
+            out[o.kind] = out.get(o.kind, 0) + o.operand_bytes
+        return out
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for o in self.ops:
+            out[o.kind] = out.get(o.kind, 0) + 1
+        return out
+
+
+def _crosses_pods(groups: Optional[List[List[int]]],
+                  devices_per_pod: int) -> bool:
+    if not groups or devices_per_pod <= 0:
+        return False
+    for g in groups:
+        pods = {d // devices_per_pod for d in g}
+        if len(pods) > 1:
+            return True
+    return False
+
+
+def parse_collectives(hlo_text: str, devices_per_pod: int = 0
+                      ) -> CollectiveSummary:
+    """devices_per_pod=256 for the (2,16,16) multi-pod mesh; 0 => single pod."""
+    summary = CollectiveSummary()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # match 'op-name(' as the instruction, e.g. '%ag = bf16[..] all-gather(..'
+        m = re.search(r"=\s*(\([^)]*\)|\S+)\s+([a-z\-]+)(?:-start|-done)?\(", ls)
+        if not m:
+            continue
+        kind = m.group(2)
+        if kind not in _COLLECTIVES:
+            continue
+        result_bytes = _shape_bytes(m.group(1))
+        # operand shapes: everything inside the call parens that looks like shapes
+        call = ls[m.end():]
+        operand_bytes = _shape_bytes(call.split(")")[0]) or result_bytes
+        groups = _parse_replica_groups(ls) or _parse_iota_groups(ls)
+        if kind == "collective-permute":
+            # source_target_pairs instead of replica groups
+            pairs = re.search(r"source_target_pairs=(\{\{.*?\}\})", ls)
+            cross = False
+            if pairs and devices_per_pod:
+                for pm in re.finditer(r"\{(\d+),(\d+)\}", pairs.group(1)):
+                    a, b = int(pm.group(1)), int(pm.group(2))
+                    if a // devices_per_pod != b // devices_per_pod:
+                        cross = True
+                        break
+            summary.ops.append(CollectiveOp(kind, result_bytes, operand_bytes,
+                                            None, cross, ls[:160]))
+            continue
+        cross = _crosses_pods(groups, devices_per_pod)
+        summary.ops.append(CollectiveOp(kind, result_bytes, operand_bytes,
+                                        groups, cross, ls[:160]))
+    return summary
+
+
+def parse_flops_bytes(cost: Dict) -> Tuple[float, float]:
+    """cost_analysis() dict -> (flops, bytes accessed)."""
+    flops = float(cost.get("flops", 0.0))
+    b = cost.get("bytes accessed", 0.0)
+    return flops, float(b)

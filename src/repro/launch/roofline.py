@@ -1,0 +1,117 @@
+"""Roofline model from the compiled dry-run artifact (no real hardware).
+
+Hardware constants (TPU v5e, per chip):
+    peak bf16 compute  197 TFLOP/s
+    HBM bandwidth      819 GB/s
+    ICI link bandwidth ~50 GB/s per link
+
+Terms (seconds, per step) — the compiled module is the per-device SPMD
+program, so cost_analysis() numbers are per-device:
+
+    compute    = HLO_FLOPs_per_device / peak
+    memory     = HLO_bytes_per_device / hbm_bw
+    collective = collective_bytes_per_device / link_bw
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) over the GLOBAL tokens per
+step; the ratio MODEL_FLOPS / (HLO_FLOPs · chips) measures how much compiled
+compute is "useful" (catches remat/dispatch/redundancy waste).
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+from repro.configs.base import InputShape, ModelConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # raw per-device numbers from the compiled module
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    cross_pod_bytes: float
+    # terms in seconds
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    # usefulness
+    model_flops: float
+    useful_ratio: float
+    note: str = ""
+
+    def to_dict(self) -> Dict:
+        return asdict(self)
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token: MoE layers count top_k of num_experts."""
+    total = cfg.param_count()
+    if cfg.moe is None:
+        return total
+    # subtract the inactive expert fraction of the expert FFN params
+    m = cfg.moe
+    d, dff = cfg.d_model, cfg.d_ff
+    mult = 3 if cfg.act == "silu" else 2
+    per_expert = mult * d * dff
+    n_moe_layers = sum(cfg.is_moe_layer(i) for i in range(cfg.num_layers))
+    inactive = n_moe_layers * (m.num_experts - m.top_k) * per_expert
+    return total - inactive
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """6·N_active·D with D = global tokens processed per step."""
+    n = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens          # forward only
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def build_report(arch: str, shape: InputShape, mesh_name: str, chips: int,
+                 hlo_flops: float, hlo_bytes: float, collective_bytes: float,
+                 cross_pod_bytes: float, cfg: Optional[ModelConfig],
+                 note: str = "") -> RooflineReport:
+    compute_s = hlo_flops / PEAK_FLOPS
+    memory_s = hlo_bytes / HBM_BW
+    collective_s = collective_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape) if cfg is not None else 0.0
+    total_hlo = hlo_flops * chips
+    ratio = (mf / total_hlo) if total_hlo > 0 else 0.0
+    return RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes,
+        collective_bytes=collective_bytes, cross_pod_bytes=cross_pod_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=mf, useful_ratio=ratio, note=note)
+
+
+def format_table(reports) -> str:
+    cols = ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+            "bottleneck", "useful_ratio"]
+    lines = ["| " + " | ".join(cols) + " |",
+             "|" + "|".join("---" for _ in cols) + "|"]
+    for r in reports:
+        d = r.to_dict() if hasattr(r, "to_dict") else r
+        row = []
+        for c in cols:
+            v = d[c]
+            row.append(f"{v:.3e}" if isinstance(v, float) else str(v))
+        lines.append("| " + " | ".join(row) + " |")
+    return "\n".join(lines)

@@ -1,0 +1,97 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the batch pytree for the train/prefill
+kinds; decode additionally needs the cache specs (``cache_specs``). VLM/audio
+stubs provide precomputed patch/frame embeddings of the right shape — the one
+carve-out to "no stubs" per the assignment.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+PyTree = Any
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape,
+                      n_stack: int = 0, microbatch: int = 1) -> Dict[str, SDS]:
+    """Batch specs for a train step.
+
+    n_stack>0 prepends the codist model axis (the global batch is SPLIT
+    across the n models — the paper's '2-way codist with batch B per model vs
+    all_reduce with 2B'); microbatch>1 inserts a (k, B/k) gradient-
+    accumulation axis after it.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if n_stack:
+        assert b % n_stack == 0
+        b = b // n_stack
+    if microbatch > 1:
+        assert b % microbatch == 0
+        b = b // microbatch
+    act = jnp.dtype(cfg.dtype)
+
+    def st(*dims, dtype=jnp.int32):
+        if microbatch > 1:
+            dims = (microbatch, *dims)
+        if n_stack:
+            dims = (n_stack, *dims)
+        return SDS(dims, dtype)
+
+    batch: Dict[str, SDS] = {}
+    if cfg.is_encdec:
+        if cfg.num_audio_frames > 0:
+            batch["frames"] = st(b, cfg.num_audio_frames, cfg.d_model,
+                                 dtype=act)
+        else:
+            batch["src_tokens"] = st(b, s)
+        batch["tokens"] = st(b, s)
+        batch["labels"] = st(b, s)
+        batch["mask"] = st(b, s, dtype=jnp.float32)
+        return batch
+    if cfg.num_patches > 0:
+        text = s - cfg.num_patches
+        batch["patches"] = st(b, cfg.num_patches, cfg.d_model, dtype=act)
+        batch["tokens"] = st(b, text)
+        batch["labels"] = st(b, text)
+        batch["mask"] = st(b, text, dtype=jnp.float32)
+        return batch
+    batch["tokens"] = st(b, s)
+    batch["labels"] = st(b, s)
+    batch["mask"] = st(b, s, dtype=jnp.float32)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, SDS]:
+    batch = train_batch_specs(cfg, shape)
+    batch.pop("labels", None)
+    batch.pop("mask", None)
+    return batch
+
+
+def decode_token_specs(shape: InputShape) -> SDS:
+    return SDS((shape.global_batch, 1), jnp.int32)
+
+
+def cache_specs(model, cfg: ModelConfig, shape: InputShape,
+                cache_dtype=jnp.bfloat16) -> PyTree:
+    """abstract cache pytree for a decode step with capacity = seq_len."""
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                 cache_dtype))
+
+
+def params_specs(model) -> PyTree:
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+def stacked_params_specs(model, n: int) -> PyTree:
+    def init_stacked():
+        keys = jax.random.split(jax.random.key(0), n)
+        return jax.vmap(model.init)(keys)
+    return jax.eval_shape(init_stacked)

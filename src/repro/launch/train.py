@@ -1,0 +1,135 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+        --mode codist --codist-n 2 --steps 200 --batch 8 --seq 128 \
+        --reduced --out results/train_run
+
+On this container it runs REDUCED configs on CPU with synthetic data; on a
+real cluster the same entrypoint takes the full config (drop ``--reduced``)
+and the production mesh (``--mesh single|multi``), where pjit shards the step
+exactly as the dry-run proved.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from dataclasses import replace
+
+import jax
+
+from repro.configs import (CodistConfig, TrainConfig, get_config, get_reduced,
+                           list_archs)
+from repro.data import MarkovLM, make_lm_batch
+from repro.models import build_model
+from repro.train import stack_batches, train_allreduce, train_codist
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=list_archs())
+    ap.add_argument("--mode", default="codist",
+                    choices=["codist", "codist-ckpt", "codist-pipelined",
+                             "allreduce"])
+    ap.add_argument("--codist-n", type=int, default=2)
+    ap.add_argument("--period", type=int, default=1)
+    ap.add_argument("--alpha", type=float, default=1.0)
+    ap.add_argument("--alpha-growth", type=float, default=1.0)
+    ap.add_argument("--distill-loss", default="mse",
+                    choices=["mse", "kl", "ce"])
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "topk", "bf16", "subsample"])
+    ap.add_argument("--topk", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8, help="per-model batch")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--lr-schedule", default="cosine",
+                    choices=["cosine", "step", "constant"])
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--weight-decay", type=float, default=1e-4)
+    ap.add_argument("--wd-schedule", action="store_true",
+                    help="paper's decayed weight decay")
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgdm"])
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--eval-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    model = build_model(cfg)
+    vocab = min(cfg.vocab_size, 512)
+    task = MarkovLM(vocab=vocab, seed=args.seed,
+                    effective_vocab=min(vocab, 256))
+    tc = TrainConfig(
+        lr=args.lr, lr_schedule=args.lr_schedule, warmup_steps=args.warmup,
+        total_steps=args.steps, weight_decay=args.weight_decay,
+        weight_decay_schedule=(5e-4, 1e-5, 0.0) if args.wd_schedule else (),
+        optimizer=args.optimizer, seed=args.seed)
+
+    def eval_batches(step):
+        if args.mode == "allreduce":
+            return make_lm_batch(task, args.batch, args.seq, 10_000 + step,
+                                 None, seed=args.seed + 1)
+        return stack_batches([
+            make_lm_batch(task, args.batch, args.seq, 10_000 + step, None,
+                          seed=args.seed + 1)
+            for _ in range(args.codist_n)])
+
+    t0 = time.time()
+    if args.mode == "allreduce":
+        def it():
+            s = 0
+            while True:
+                yield make_lm_batch(task, args.batch, args.seq, s, None,
+                                    seed=args.seed)
+                s += 1
+        state, hist = train_allreduce(model, tc, it(),
+                                      eval_batches=eval_batches,
+                                      eval_every=args.eval_every,
+                                      log_every=args.log_every)
+    else:
+        codist = CodistConfig(
+            n_models=args.codist_n,
+            mode="checkpoints" if args.mode == "codist-ckpt" else "predictions",
+            pipelined=args.mode == "codist-pipelined",
+            period=args.period, alpha0=args.alpha,
+            alpha_growth=args.alpha_growth, distill_loss=args.distill_loss,
+            compression=args.compression, topk=args.topk,
+            steps_per_epoch=max(1, args.steps // 10))
+        coordinated = codist.mode == "predictions"
+
+        def batches(step):
+            return stack_batches([
+                make_lm_batch(task, args.batch, args.seq, step,
+                              None if coordinated else g, seed=args.seed)
+                for g in range(args.codist_n)])
+
+        state, hist = train_codist(model, codist, tc, batches,
+                                   eval_batches=eval_batches,
+                                   eval_every=args.eval_every,
+                                   log_every=args.log_every)
+    dt = time.time() - t0
+
+    for rec in hist.records:
+        msg = " ".join(f"{k}={v:.4f}" if isinstance(v, float) else f"{k}={v}"
+                       for k, v in rec.items()
+                       if k in ("step", "task_loss", "distill_loss",
+                                "eval_loss", "lr", "wd", "alpha"))
+        print(msg, flush=True)
+    print(f"done: {args.steps} steps in {dt:.1f}s "
+          f"({dt / args.steps * 1e3:.0f} ms/step)")
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        with open(os.path.join(args.out, "history.json"), "w") as f:
+            json.dump(hist.records, f, indent=1)
+        from repro.checkpoint import save_pytree
+        save_pytree(os.path.join(args.out, "final"), state.params)
+        print(f"wrote {args.out}/history.json and final checkpoint")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Model registry: build a model object (init/forward/prefill/decode) from a config."""
+from __future__ import annotations
+
+from typing import Union
+
+from repro.configs.base import ModelConfig
+from repro.models.conv import ConvConfig, ConvNet
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import LM
+
+
+def build_model(cfg: Union[ModelConfig, ConvConfig]):
+    if isinstance(cfg, ConvConfig):
+        return ConvNet(cfg)
+    if cfg.is_encdec:
+        return EncDecLM(cfg)
+    return LM(cfg)

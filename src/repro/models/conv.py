@@ -1,0 +1,159 @@
+"""ResNet / Wide-ResNet image classifiers — the paper's own vision workloads.
+
+Used for paper-faithful experiments at reduced scale (codistillation vs
+all_reduce on synthetic/CIFAR-like data) and the Section-5.1 multi-view
+channel-split setup: ``forward(..., split=(i, n))`` zeroes all but the i-th of
+n channel groups after the first stage, reproducing the frozen-bottleneck
+"views" construction.
+
+Adaptation note: BatchNorm is replaced with GroupNorm(8) — codistillation
+experiments need deterministic, batch-size-independent normalization (the
+paper's claims are not about BN statistics), and GroupNorm keeps the step
+function pure (no mutable state to synchronize across codistilling replicas).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import KeyGen, dense_init
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class ConvConfig:
+    name: str
+    kind: str                  # 'resnet' | 'wideresnet'
+    depths: Tuple[int, ...]    # blocks per stage
+    widths: Tuple[int, ...]    # channels per stage
+    bottleneck: bool
+    num_classes: int
+    image_size: int
+    groups: int = 8            # groupnorm groups
+    source: str = ""
+
+    @property
+    def family(self) -> str:
+        return "conv"
+
+
+def _conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    fan_in = kh * kw * cin
+    std = (2.0 / fan_in) ** 0.5
+    return (jax.random.normal(key, (kh, kw, cin, cout)) * std).astype(dtype)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _gn(x, scale, bias, groups=8, eps=1e-5):
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g:
+        g -= 1
+    xg = x.reshape(n, h, w, g, c // g).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(n, h, w, c) * scale + bias).astype(x.dtype)
+
+
+def _init_block(key, cin, cout, bottleneck, dtype=jnp.float32):
+    kg = KeyGen(key)
+    p: Dict = {}
+    if bottleneck:
+        mid = cout // 4
+        p["conv1"] = _conv_init(kg(), 1, 1, cin, mid, dtype)
+        p["conv2"] = _conv_init(kg(), 3, 3, mid, mid, dtype)
+        p["conv3"] = _conv_init(kg(), 1, 1, mid, cout, dtype)
+        dims = (mid, mid, cout)
+    else:
+        p["conv1"] = _conv_init(kg(), 3, 3, cin, cout, dtype)
+        p["conv2"] = _conv_init(kg(), 3, 3, cout, cout, dtype)
+        dims = (cout, cout)
+    for i, d in enumerate(dims, 1):
+        p[f"gn{i}_scale"] = jnp.ones((d,), dtype)
+        p[f"gn{i}_bias"] = jnp.zeros((d,), dtype)
+    if cin != cout:
+        p["proj"] = _conv_init(kg(), 1, 1, cin, cout, dtype)
+    return p
+
+
+def _block_fwd(p, x, stride, cfg: ConvConfig):
+    h = x
+    if "conv3" in p:  # bottleneck
+        h = jax.nn.relu(_gn(_conv(h, p["conv1"], 1), p["gn1_scale"], p["gn1_bias"], cfg.groups))
+        h = jax.nn.relu(_gn(_conv(h, p["conv2"], stride), p["gn2_scale"], p["gn2_bias"], cfg.groups))
+        h = _gn(_conv(h, p["conv3"], 1), p["gn3_scale"], p["gn3_bias"], cfg.groups)
+    else:
+        h = jax.nn.relu(_gn(_conv(h, p["conv1"], stride), p["gn1_scale"], p["gn1_bias"], cfg.groups))
+        h = _gn(_conv(h, p["conv2"], 1), p["gn2_scale"], p["gn2_bias"], cfg.groups)
+    sc = x
+    if "proj" in p:
+        sc = _conv(sc, p["proj"], stride)
+    elif stride != 1:
+        sc = sc[:, ::stride, ::stride]
+    return jax.nn.relu(h + sc)
+
+
+@dataclass(frozen=True)
+class ConvNet:
+    cfg: ConvConfig
+
+    def init(self, key: jax.Array) -> PyTree:
+        cfg = self.cfg
+        kg = KeyGen(key)
+        stem_out = cfg.widths[0] if not cfg.bottleneck else max(16, cfg.widths[0] // 4)
+        params: Dict = {
+            "stem": _conv_init(kg(), 3, 3, 3, stem_out, jnp.float32),
+            "stem_gn_scale": jnp.ones((stem_out,)),
+            "stem_gn_bias": jnp.zeros((stem_out,)),
+        }
+        cin = stem_out
+        for s, (depth, width) in enumerate(zip(cfg.depths, cfg.widths)):
+            for b in range(depth):
+                params[f"s{s}b{b}"] = _init_block(kg(), cin, width,
+                                                  cfg.bottleneck)
+                cin = width
+        params["head"] = dense_init(kg(), cin, (cfg.num_classes,))
+        return params
+
+    def forward(self, params: PyTree, batch: Dict,
+                split: Optional[Tuple[int, int]] = None,
+                remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+        """batch['images']: (B,H,W,3). split=(i,n): keep only the i-th of n
+        channel groups after stage 0 (the Section-5.1 multi-view views)."""
+        cfg = self.cfg
+        x = batch["images"]
+        x = jax.nn.relu(_gn(_conv(x, params["stem"], 1),
+                            params["stem_gn_scale"], params["stem_gn_bias"],
+                            cfg.groups))
+        for s, (depth, _w) in enumerate(zip(cfg.depths, cfg.widths)):
+            for b in range(depth):
+                stride = 2 if (s > 0 and b == 0) else 1
+                x = _block_fwd(params[f"s{s}b{b}"], x, stride, cfg)
+            if s == 0 and split is not None:
+                i, n = split
+                c = x.shape[-1]
+                w = c // n
+                mask = jnp.zeros((c,), x.dtype).at[i * w:(i + 1) * w].set(1.0)
+                x = x * mask
+        x = jnp.mean(x, axis=(1, 2))
+        logits = jnp.einsum("bc,ck->bk", x.astype(jnp.float32),
+                            params["head"].astype(jnp.float32))
+        return logits, jnp.zeros((), jnp.float32)
+
+
+def freeze_mask(params: PyTree, prefixes: Tuple[str, ...]) -> PyTree:
+    """1.0 for trainable leaves, 0.0 for frozen ones (stage prefixes, 'stem')."""
+    def tag(path, _leaf):
+        name = path[0].key if hasattr(path[0], "key") else str(path[0])
+        return 0.0 if any(name.startswith(p) for p in prefixes) else 1.0
+    return jax.tree_util.tree_map_with_path(tag, params)

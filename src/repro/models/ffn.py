@@ -1,0 +1,39 @@
+"""Dense feed-forward blocks: SwiGLU (llama-family) and plain 2-layer MLP."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import KeyGen, activation, dense_init
+
+
+def init_ffn(key: jax.Array, cfg: ModelConfig, d_ff: int | None = None,
+             dtype=jnp.float32) -> Dict[str, jax.Array]:
+    kg = KeyGen(key)
+    d = cfg.d_model
+    dff = d_ff or cfg.d_ff
+    if cfg.act in ("silu", "geglu"):  # SwiGLU / GeGLU: gate, up, down
+        return {
+            "w_gate": dense_init(kg(), d, (dff,), dtype),
+            "w_up": dense_init(kg(), d, (dff,), dtype),
+            "w_down": dense_init(kg(), dff, (d,), dtype,
+                                 scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+        }
+    return {
+        "w_up": dense_init(kg(), d, (dff,), dtype),
+        "w_down": dense_init(kg(), dff, (d,), dtype,
+                             scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+    }
+
+
+def ffn_forward(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = activation(cfg.act if cfg.act not in ("relu",) else "gelu")
+    if "w_gate" in p:
+        h = act(jnp.einsum("...d,df->...f", x, p["w_gate"].astype(x.dtype)))
+        h = h * jnp.einsum("...d,df->...f", x, p["w_up"].astype(x.dtype))
+    else:
+        h = act(jnp.einsum("...d,df->...f", x, p["w_up"].astype(x.dtype)))
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(x.dtype))

@@ -1,0 +1,189 @@
+"""Mamba (selective SSM) block — used by the Jamba hybrid architecture.
+
+Training/prefill uses a parallel associative scan over time (optionally chunked
+to bound the materialized (B, C, d_inner, d_state) working set — the TPU-native
+adaptation of the paper's CUDA selective-scan kernel: chunk size is picked so
+the per-chunk state tensor fits VMEM after TP sharding of d_inner).
+Decode carries an explicit (h, conv window) state — O(1) per token, which is
+what makes ``long_500k`` run for the hybrid family.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.common import KeyGen, dense_init, zeros
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm or SSMConfig()
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, dt_rank, s.d_state, s.d_conv
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    kg = KeyGen(key)
+    d = cfg.d_model
+    d_inner, dt_rank, d_state, d_conv = _dims(cfg)
+    p = {
+        "in_proj": dense_init(kg(), d, (2 * d_inner,), dtype),
+        "conv_w": (jax.random.normal(kg(), (d_conv, d_inner)) * 0.1).astype(dtype),
+        "conv_b": zeros((d_inner,), dtype),
+        "x_proj": dense_init(kg(), d_inner, (dt_rank + 2 * d_state,), dtype),
+        "dt_proj": dense_init(kg(), dt_rank, (d_inner,), dtype),
+        "dt_bias": zeros((d_inner,), dtype),
+        # S4D-real init: A_log = log(1..d_state)
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                                  (d_inner, 1))).astype(dtype),
+        "D": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(kg(), d_inner, (d,), dtype,
+                               scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+    }
+    return p
+
+
+def _ssm_inputs(p: Dict, xc: jax.Array, cfg: ModelConfig):
+    """xc: (..., d_inner) post-conv activations -> (dt, B, C) selective params."""
+    _, dt_rank, d_state, _ = _dims(cfg)
+    proj = jnp.einsum("...i,ij->...j", xc, p["x_proj"].astype(xc.dtype))
+    dt_in, b, c = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jnp.einsum("...r,ri->...i", dt_in, p["dt_proj"].astype(xc.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    return dt, b.astype(jnp.float32), c.astype(jnp.float32)
+
+
+def _discretize(p: Dict, dt: jax.Array, b: jax.Array, xc: jax.Array):
+    """Returns (a_bar, bx): h_t = a_bar_t * h_{t-1} + bx_t, shapes (...,d_in,N)."""
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))              # (d_in, N)
+    a_bar = jnp.exp(dt[..., None] * a)                        # (...,d_in,N)
+    bx = dt[..., None] * b[..., None, :] * xc.astype(jnp.float32)[..., None]
+    return a_bar, bx
+
+
+def _causal_conv(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Depthwise causal conv over (B,L,d_inner)."""
+    _, _, _, d_conv = _dims(cfg)
+    pad = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    w = p["conv_w"].astype(x.dtype)                           # (d_conv, d_in)
+    y = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(d_conv))
+    return y + p["conv_b"].astype(x.dtype)
+
+
+def _scan_assoc(a_bar: jax.Array, bx: jax.Array,
+                h0: jax.Array | None = None):
+    """Associative scan over axis=1 (time). Returns h (B,L,d_in,N)."""
+    if h0 is not None:
+        # fold initial state into the first step
+        bx = bx.at[:, 0].add(a_bar[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+    return h
+
+
+def mamba_scan(a_bar: jax.Array, bx: jax.Array, chunk: int = 128,
+               h0: jax.Array | None = None):
+    """Chunked parallel scan: associative within chunks, lax.scan across.
+
+    a_bar, bx: (B, L, d_in, N). Bounds the materialized scan working set to
+    (B, chunk, d_in, N) per chunk — VMEM-friendly after TP shards d_in.
+    """
+    b_, l, d_in, n = a_bar.shape
+    if l <= chunk:
+        return _scan_assoc(a_bar, bx, h0)
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    a_c = a_bar.reshape(b_, nc, chunk, d_in, n).transpose(1, 0, 2, 3, 4)
+    b_c = bx.reshape(b_, nc, chunk, d_in, n).transpose(1, 0, 2, 3, 4)
+    h_init = jnp.zeros((b_, d_in, n), jnp.float32) if h0 is None else h0
+
+    def step(carry, xs):
+        a_k, b_k = xs                                  # (B, chunk, d_in, N)
+        h = _scan_assoc(a_k, b_k, carry)
+        return h[:, -1], h
+
+    _, hs = jax.lax.scan(step, h_init, (a_c, b_c))
+    return hs.transpose(1, 0, 2, 3, 4).reshape(b_, l, d_in, n)
+
+
+def mamba_forward(p: Dict, x: jax.Array, cfg: ModelConfig,
+                  chunk: int = 128) -> jax.Array:
+    """x: (B,L,d) -> (B,L,d)."""
+    from repro.models.runtime_flags import resolve_chunk
+    chunk = resolve_chunk(chunk, x.shape[1])
+    d_inner, _, _, _ = _dims(cfg)
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(x.dtype))
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(p, xr, cfg))
+    dt, b, c = _ssm_inputs(p, xc, cfg)
+    a_bar, bx = _discretize(p, dt, b, xc)
+    h = mamba_scan(a_bar, bx, chunk)                          # (B,L,d_in,N)
+    y = jnp.einsum("blin,bln->bli", h, c)
+    y = y + xc.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return jnp.einsum("bli,id->bld", y, p["out_proj"].astype(x.dtype))
+
+
+def mamba_prefill(p: Dict, x: jax.Array, cfg: ModelConfig,
+                  chunk: int = 128) -> Tuple[jax.Array, Dict]:
+    """Forward that also emits the decode state (h_final, conv window)."""
+    from repro.models.runtime_flags import resolve_chunk
+    chunk = resolve_chunk(chunk, x.shape[1])
+    d_inner, _, _, d_conv = _dims(cfg)
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(x.dtype))
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(p, xr, cfg))
+    dt, b, c = _ssm_inputs(p, xc, cfg)
+    a_bar, bx = _discretize(p, dt, b, xc)
+    h = mamba_scan(a_bar, bx, chunk)
+    y = jnp.einsum("blin,bln->bli", h, c)
+    y = y + xc.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bli,id->bld", y, p["out_proj"].astype(x.dtype))
+    # conv window = last (d_conv-1) pre-activation inputs (pad if short)
+    tail = xr[:, -(d_conv - 1):]
+    pad = d_conv - 1 - tail.shape[1]
+    if pad > 0:
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+    state = {"h": h[:, -1], "conv": tail}
+    return out, state
+
+
+# ----------------------------------------------------------------------------
+# decode: O(1) recurrent state
+# ----------------------------------------------------------------------------
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    d_inner, _, d_state, d_conv = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+    }
+
+
+def mamba_decode(p: Dict, x: jax.Array, state: Dict,
+                 cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """x: (B,1,d) one token. Returns (y (B,1,d), new_state)."""
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(x.dtype))
+    xr, z = jnp.split(xz, 2, axis=-1)                          # (B,1,d_in)
+    window = jnp.concatenate([state["conv"], xr[:, 0:1]], axis=1)  # (B,d_conv,d_in)
+    w = p["conv_w"].astype(x.dtype)
+    xc = jnp.einsum("bki,ki->bi", window, w) + p["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(xc)[:, None]                              # (B,1,d_in)
+    dt, b, c = _ssm_inputs(p, xc, cfg)
+    a_bar, bx = _discretize(p, dt, b, xc)                      # (B,1,d_in,N)
+    h = a_bar[:, 0] * state["h"] + bx[:, 0]                    # (B,d_in,N)
+    y = jnp.einsum("bin,bn->bi", h, c[:, 0])
+    y = y + xc[:, 0].astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = (y[:, None].astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bli,id->bld", y, p["out_proj"].astype(x.dtype))
+    return out, {"h": h, "conv": window[:, 1:]}

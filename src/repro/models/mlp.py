@@ -1,0 +1,49 @@
+"""Small MLP classifier — the controlled model for the Section-5.1
+multi-view experiments (stands in for the channel-split Wide-ResNet: what
+matters is which VIEW of the features each codistilling model receives)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import KeyGen, dense_init
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class MLPConfig:
+    name: str = "mlp"
+    in_dim: int = 128
+    hidden: Tuple[int, ...] = (256, 256)
+    num_classes: int = 10
+    kind: str = "mlp"  # marks non-LM path for the train steps
+
+    @property
+    def family(self) -> str:
+        return "mlp"
+
+
+@dataclass(frozen=True)
+class MLP:
+    cfg: MLPConfig
+
+    def init(self, key: jax.Array) -> PyTree:
+        kg = KeyGen(key)
+        dims = (self.cfg.in_dim, *self.cfg.hidden, self.cfg.num_classes)
+        return {f"w{i}": dense_init(kg(), a, (b,))
+                for i, (a, b) in enumerate(zip(dims, dims[1:]))} | {
+                f"b{i}": jnp.zeros((b,))
+                for i, b in enumerate(dims[1:])}
+
+    def forward(self, params: PyTree, batch: Dict) -> Tuple[jax.Array, jax.Array]:
+        x = batch["features"].astype(jnp.float32)
+        n = len(self.cfg.hidden) + 1
+        for i in range(n):
+            x = x @ params[f"w{i}"] + params[f"b{i}"]
+            if i < n - 1:
+                x = jax.nn.relu(x)
+        return x, jnp.zeros((), jnp.float32)

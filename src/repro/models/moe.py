@@ -1,0 +1,132 @@
+"""Top-k Mixture-of-Experts with GShard/Switch-style capacity dispatch.
+
+TPU-idiomatic: routing is turned into dense one-hot dispatch/combine einsums
+(no ragged gathers), so the whole block lowers to MXU matmuls + (under expert
+sharding) all-to-all-shaped collectives inserted by SPMD. Supports Arctic's
+dense-residual branch (a dense FFN running in parallel with the experts) and
+top-2 weight normalization (Mixtral-style).
+
+Capacity: C = ceil(top_k * T / E * capacity_factor); overflow tokens fall back
+to the residual stream (their combine weight is zero), the standard
+drop-with-residual policy.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.common import KeyGen, activation, dense_init
+from repro.models.ffn import ffn_forward, init_ffn
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    m = cfg.moe
+    assert m is not None
+    kg = KeyGen(key)
+    d, dff, e = cfg.d_model, cfg.d_ff, m.num_experts
+
+    def expert_stack(k, in_dim, out_dim, scale=1.0):
+        ks = jax.random.split(k, e)
+        return jax.vmap(lambda kk: dense_init(kk, in_dim, (out_dim,),
+                                              dtype, scale))(ks)
+
+    p: Dict = {"router": dense_init(kg(), d, (e,), dtype)}
+    if cfg.act in ("silu", "geglu"):
+        p["w_gate"] = expert_stack(kg(), d, dff)
+        p["w_up"] = expert_stack(kg(), d, dff)
+        p["w_down"] = expert_stack(kg(), dff, d,
+                                   1.0 / max(1, cfg.num_layers) ** 0.5)
+    else:
+        p["w_up"] = expert_stack(kg(), d, dff)
+        p["w_down"] = expert_stack(kg(), dff, d,
+                                   1.0 / max(1, cfg.num_layers) ** 0.5)
+    if m.dense_residual:
+        p["residual"] = init_ffn(kg(), cfg, dtype=dtype)
+    return p
+
+
+def _capacity(m: MoEConfig, tokens: int, capacity_factor: float = 1.25) -> int:
+    """capacity per expert per group; capacity_factor<=0 => NO-DROP (cap =
+    group size — serving paths use this so incremental decode is numerically
+    identical to prefill; training keeps the GShard 1.25 drop policy)."""
+    if capacity_factor <= 0:
+        return tokens
+    c = math.ceil(m.top_k * tokens / m.num_experts * capacity_factor)
+    return max(min(4, tokens), min(tokens, c))
+
+
+def router_decisions(m: MoEConfig, logits: jax.Array,
+                     capacity: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """logits: (T, E) float32. Returns (dispatch (T,E,C) bool-ish,
+    combine (T,E,C) float32, aux load-balance loss scalar)."""
+    t, e = logits.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)       # (T,k)
+    if m.top_k > 1:  # Mixtral-style renormalization over the chosen experts
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)    # (T,k,E)
+    # GShard priority: all tokens' 1st choices first, then 2nd choices.
+    # position_in_expert[t,k,e] = (# earlier (t',k') pairs routed to e)
+    flat = onehot.transpose(1, 0, 2).reshape(m.top_k * t, e)   # (k*T, E)
+    pos_flat = jnp.cumsum(flat, axis=0) - flat                 # exclusive cumsum
+    pos = pos_flat.reshape(m.top_k, t, e).transpose(1, 0, 2)   # (T,k,E)
+    keep = (pos < capacity).astype(jnp.float32) * onehot       # (T,k,E)
+    slot = jnp.einsum("tke,tke->tk", pos, onehot)              # (T,k) slot index
+    slot_oh = jax.nn.one_hot(slot, capacity, dtype=jnp.float32)  # (T,k,C)
+    dispatch = jnp.einsum("tke,tkc->tec",
+                          keep, slot_oh)                       # (T,E,C)
+    combine = jnp.einsum("tke,tk,tkc->tec", keep, gate_vals, slot_oh)
+
+    # Switch load-balance loss over the top-k assignment fractions
+    frac_routed = jnp.mean(onehot, axis=(0, 1)) * m.top_k      # f_e, sums to k/k
+    mean_prob = jnp.mean(probs, axis=0)                        # p_e
+    aux = e * jnp.sum(frac_routed * mean_prob)
+    return dispatch, combine, aux
+
+
+def moe_forward(p: Dict, x: jax.Array, cfg: ModelConfig,
+                router_key: Optional[jax.Array] = None,
+                capacity_factor: float = 1.25):
+    """x: (B,S,d) -> (y, aux_loss).
+
+    GShard-style GROUPED dispatch: each batch row is a routing group with its
+    own capacity C = ceil(top_k * S / E * cf). This keeps the one-hot
+    dispatch/combine tensors at O(S * E * C) per group — with E*C ~= top_k*cf*S
+    that is ~quadratic in the GROUP size (like attention), instead of
+    quadratic in the global token count, and the group axis shards over
+    "data" exactly like the batch.
+    """
+    m = cfg.moe
+    assert m is not None
+    b, s, d = x.shape
+    logits = jnp.einsum("gsd,de->gse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    if router_key is not None and m.router_jitter > 0:
+        logits = logits * (1.0 + m.router_jitter * jax.random.uniform(
+            router_key, logits.shape, minval=-1.0, maxval=1.0))
+    cap = _capacity(m, s, capacity_factor)
+    dispatch, combine, aux = jax.vmap(
+        lambda lg: router_decisions(m, lg, cap))(logits)       # (G,s,E,C) x2
+    dispatch = dispatch.astype(x.dtype)
+    combine = combine.astype(x.dtype)
+    aux = jnp.mean(aux)
+
+    xin = jnp.einsum("gsec,gsd->gecd", dispatch, x)            # (G,E,C,d)
+    act = activation(cfg.act if cfg.act != "relu" else "gelu")
+    if "w_gate" in p:
+        h = act(jnp.einsum("gecd,edf->gecf", xin, p["w_gate"].astype(x.dtype)))
+        h = h * jnp.einsum("gecd,edf->gecf", xin, p["w_up"].astype(x.dtype))
+    else:
+        h = act(jnp.einsum("gecd,edf->gecf", xin, p["w_up"].astype(x.dtype)))
+    yout = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x.dtype))
+    y = jnp.einsum("gsec,gecd->gsd", combine, yout)
+
+    if "residual" in p:  # Arctic dense-MoE hybrid
+        y = y + ffn_forward(p["residual"], x, cfg)
+    return y, aux * m.load_balance_weight

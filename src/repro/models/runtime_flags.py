@@ -1,0 +1,38 @@
+"""Thread-local tracing flags used by the dry-run cost probes.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip count,
+so scanned-layer costs are invisible at full depth. The dry-run therefore
+compiles shallow PROBE variants with (a) the layer scan unrolled and (b)
+chunked SSM scans widened to a single full-sequence chunk — making every FLOP
+and collective statically visible — and extrapolates linearly in depth.
+Normal execution paths never set these flags.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+_state = threading.local()
+
+
+def scan_unroll() -> bool:
+    return getattr(_state, "unroll", False)
+
+
+def full_chunk() -> bool:
+    return getattr(_state, "full_chunk", False)
+
+
+@contextmanager
+def probe_mode():
+    _state.unroll = True
+    _state.full_chunk = True
+    try:
+        yield
+    finally:
+        _state.unroll = False
+        _state.full_chunk = False
+
+
+def resolve_chunk(chunk: int, seq_len: int) -> int:
+    return seq_len if full_chunk() else chunk

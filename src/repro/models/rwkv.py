@@ -1,0 +1,234 @@
+"""RWKV6 "Finch" block: data-dependent decay linear attention (attention-free).
+
+Time-mix uses the RWKV6 recurrence per head (hd = rwkv.head_dim):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+with data-dependent per-channel decay w_t = exp(-exp(w0 + lora_w(x))) and a
+learned bonus u. Training/prefill uses a *chunked* form — within a chunk the
+pairwise decay factors exp(L_{t-1} - L_j) <= 1 are computed from cumulative
+log-decays (never overflow), across chunks a lax.scan carries S. This is the
+TPU-native adaptation of the fused CUDA wkv kernel: the (C, C, hd) working set
+is bounded by the chunk size and head sharding. A sequential lax.scan reference
+(`rwkv_wkv_sequential`) is the oracle for property tests.
+
+Channel-mix is the RWKV squared-relu FFN with token shift.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RWKVConfig
+from repro.models.common import KeyGen, dense_init, zeros
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, RWKVConfig]:
+    r = cfg.rwkv or RWKVConfig()
+    heads = cfg.d_model // r.head_dim
+    return heads, r.head_dim, r
+
+
+# ----------------------------------------------------------------------------
+# params
+# ----------------------------------------------------------------------------
+
+def init_time_mix(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    kg = KeyGen(key)
+    d = cfg.d_model
+    h, hd, r = _dims(cfg)
+    p = {
+        "w_r": dense_init(kg(), d, (d,), dtype),
+        "w_k": dense_init(kg(), d, (d,), dtype),
+        "w_v": dense_init(kg(), d, (d,), dtype),
+        "w_g": dense_init(kg(), d, (d,), dtype),
+        "w_o": dense_init(kg(), d, (d,), dtype,
+                          scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+        # decay: w0 + lora (tanh bottleneck), per channel
+        "decay_base": jnp.linspace(-6.0, -0.5, d).astype(dtype),
+        "decay_lora_a": dense_init(kg(), d, (r.decay_lora,), dtype),
+        "decay_lora_b": dense_init(kg(), r.decay_lora, (d,), dtype, scale=0.1),
+        "bonus": (jax.random.normal(kg(), (h, hd)) * 0.1).astype(dtype),
+        # token-shift data-dependent mixers: base mu + lora per stream (r,k,v,w,g)
+        "mix_base": (jax.random.uniform(kg(), (5, d))).astype(dtype),
+        "mix_lora_a": dense_init(kg(), d, (5, r.mix_lora), dtype),
+        "mix_lora_b": (jax.random.normal(kg(), (5, r.mix_lora, d)) * 0.01).astype(dtype),
+        "ln_x_scale": jnp.ones((d,), dtype),  # per-head groupnorm on y
+        "ln_x_bias": zeros((d,), dtype),
+    }
+    return p
+
+
+def init_channel_mix(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    kg = KeyGen(key)
+    d = cfg.d_model
+    return {
+        "w_k": dense_init(kg(), d, (cfg.d_ff,), dtype),
+        "w_v": dense_init(kg(), cfg.d_ff, (d,), dtype,
+                          scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+        "w_r": dense_init(kg(), d, (d,), dtype),
+        "mix_k": (jax.random.uniform(kg(), (d,))).astype(dtype),
+        "mix_r": (jax.random.uniform(kg(), (d,))).astype(dtype),
+    }
+
+
+# ----------------------------------------------------------------------------
+# token shift
+# ----------------------------------------------------------------------------
+
+def _shift(x: jax.Array, prev: jax.Array | None = None) -> jax.Array:
+    """x_{t-1}; first position takes `prev` (decode carry) or zeros."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _tm_streams(p: Dict, x: jax.Array, x_prev: jax.Array):
+    """RWKV6 data-dependent token shift -> the 5 mixed streams (r,k,v,w,g)."""
+    xx = x_prev - x
+    # first-stage mix uses mix_base[0]'s sibling: RWKV6 uses a dedicated mu_x;
+    # we reuse the mean of the bases for the lora input mix (faithful in spirit)
+    mu_x = jnp.mean(p["mix_base"].astype(x.dtype), axis=0)
+    xxx = x + xx * mu_x
+    lora_in = jnp.tanh(jnp.einsum("bld,dsr->blsr", xxx,
+                                  p["mix_lora_a"].astype(x.dtype)))
+    deltas = jnp.einsum("blsr,srd->blsd", lora_in,
+                        p["mix_lora_b"].astype(x.dtype))       # (B,L,5,d)
+    mixes = p["mix_base"].astype(x.dtype)[None, None] + deltas  # (B,L,5,d)
+    streams = x[:, :, None] + xx[:, :, None] * mixes            # (B,L,5,d)
+    return [streams[:, :, i] for i in range(5)]
+
+
+def _heads(x: jax.Array, h: int, hd: int) -> jax.Array:
+    b, l, _ = x.shape
+    return x.reshape(b, l, h, hd)
+
+
+def _group_norm(y: jax.Array, scale: jax.Array, bias: jax.Array,
+                eps: float = 64e-5) -> jax.Array:
+    """Per-head layernorm on (B,L,H,hd), flattened back to (B,L,d)."""
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + eps)
+    b, l, h, hd = y.shape
+    yn = yn.reshape(b, l, h * hd)
+    return yn * scale + bias
+
+
+# ----------------------------------------------------------------------------
+# the wkv recurrence: sequential oracle + chunked parallel form
+# ----------------------------------------------------------------------------
+
+def rwkv_wkv_sequential(r: jax.Array, k: jax.Array, v: jax.Array,
+                        w: jax.Array, u: jax.Array,
+                        s0: jax.Array | None = None):
+    """Exact recurrence via lax.scan. r/k/v/w: (B,L,H,hd) fp32; u: (H,hd).
+    Returns (y (B,L,H,hd), s_final (B,H,hd,hd))."""
+    b, l, h, hd = r.shape
+    s_init = jnp.zeros((b, h, hd, hd), jnp.float32) if s0 is None else s0
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs  # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s_new = wt[..., None] * s + kv
+        return s_new, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s_fin, ys = jax.lax.scan(step, s_init, xs)
+    return jnp.moveaxis(ys, 0, 1), s_fin
+
+
+def rwkv_wkv_chunked(r: jax.Array, k: jax.Array, v: jax.Array,
+                     w: jax.Array, u: jax.Array, chunk: int = 64,
+                     s0: jax.Array | None = None):
+    """Chunked parallel form; matches the sequential oracle to fp32 tolerance."""
+    b, l, h, hd = r.shape
+    if l % chunk != 0:
+        return rwkv_wkv_sequential(r, k, v, w, u, s0)
+    nc = l // chunk
+    s_init = jnp.zeros((b, h, hd, hd), jnp.float32) if s0 is None else s0
+
+    rc, kc, vc, wc = (t.reshape(b, nc, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+                      for t in (r, k, v, w))
+
+    def per_chunk(s, xs):
+        rt, kt, vt, wt = xs                       # (B,C,H,hd)
+        logw = jnp.log(jnp.maximum(wt, 1e-38))
+        li = jnp.cumsum(logw, axis=1)             # inclusive L_t
+        le = li - logw                            # exclusive L_{t-1}
+        # inter-chunk: y_t += (r_t * exp(L_{t-1}))^T s
+        y_inter = jnp.einsum("bchk,bhkv->bchv", rt * jnp.exp(le), s)
+        # intra-chunk: pairwise decay exp(L_{t-1} - L_j), j < t (never > 1)
+        decay = jnp.exp(jnp.clip(le[:, :, None] - li[:, None, :], -60.0, 0.0))
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+        att = jnp.einsum("bthk,bjhk,btjhk->bthj", rt, kt, decay)
+        att = att * tri[None, :, None, :]
+        y_intra = jnp.einsum("bthj,bjhv->bthv", att, vt)
+        # diagonal bonus term
+        bonus = jnp.einsum("bchk,bchk->bch", rt * u[None, None], kt)
+        y = y_inter + y_intra + bonus[..., None] * vt
+        # state update: S' = diag(exp(L_C)) S + sum_j diag(exp(L_C - L_j)) k_j v_j
+        lc = li[:, -1:]                           # (B,1,H,hd)
+        s_new = jnp.exp(lc[:, 0])[..., None] * s + jnp.einsum(
+            "bjhk,bjhv->bhkv", kt * jnp.exp(jnp.clip(lc - li, -60.0, 0.0)), vt)
+        return s_new, y
+
+    s_fin, ys = jax.lax.scan(per_chunk, s_init, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, l, h, hd)
+    return y, s_fin
+
+
+def _decay(p: Dict, xw: jax.Array) -> jax.Array:
+    """Data-dependent decay w_t in (0,1): exp(-exp(base + lora(xw)))."""
+    lora = jnp.einsum("bld,dr->blr", xw, p["decay_lora_a"].astype(xw.dtype))
+    lora = jnp.einsum("blr,rd->bld", jnp.tanh(lora),
+                      p["decay_lora_b"].astype(xw.dtype))
+    raw = p["decay_base"].astype(jnp.float32) + lora.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(raw))
+
+
+def time_mix_forward(p: Dict, x: jax.Array, cfg: ModelConfig,
+                     shift_prev: jax.Array | None = None,
+                     s0: jax.Array | None = None, chunk: int = 64,
+                     sequential: bool = False):
+    """x: (B,L,d) -> (y, (last_x, s_final)) — carries enable decode."""
+    from repro.models.runtime_flags import resolve_chunk
+    # NOTE: probe-mode widens the chunk to the full sequence so the wkv cost
+    # is statically visible; the pairwise-decay part of the probed cost is
+    # then an UPPER BOUND that overcounts by L/chunk (production chunk=64) —
+    # EXPERIMENTS.md §Roofline applies the analytic correction.
+    chunk = resolve_chunk(chunk, x.shape[1])
+    h, hd, _ = _dims(cfg)
+    x_prev = _shift(x, shift_prev)
+    xr, xk, xv, xw, xg = _tm_streams(p, x, x_prev)
+    r = _heads(jnp.einsum("bld,de->ble", xr, p["w_r"].astype(x.dtype)), h, hd)
+    k = _heads(jnp.einsum("bld,de->ble", xk, p["w_k"].astype(x.dtype)), h, hd)
+    v = _heads(jnp.einsum("bld,de->ble", xv, p["w_v"].astype(x.dtype)), h, hd)
+    g = jax.nn.silu(jnp.einsum("bld,de->ble", xg, p["w_g"].astype(x.dtype)))
+    w = _heads(_decay(p, xw), h, hd)
+    u = p["bonus"].astype(jnp.float32)
+    wkv = rwkv_wkv_sequential if sequential else (
+        lambda *a, **kw: rwkv_wkv_chunked(*a, chunk=chunk, **kw))
+    y, s_fin = wkv(r.astype(jnp.float32), k.astype(jnp.float32),
+                   v.astype(jnp.float32), w, u, s0=s0)
+    y = _group_norm(y, p["ln_x_scale"].astype(jnp.float32),
+                    p["ln_x_bias"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bld,de->ble", y * g, p["w_o"].astype(x.dtype))
+    return out, (x[:, -1:], s_fin)
+
+
+def channel_mix_forward(p: Dict, x: jax.Array, cfg: ModelConfig,
+                        shift_prev: jax.Array | None = None):
+    x_prev = _shift(x, shift_prev)
+    xx = x_prev - x
+    xk = x + xx * p["mix_k"].astype(x.dtype)
+    xr = x + xx * p["mix_r"].astype(x.dtype)
+    k = jnp.einsum("bld,df->blf", xk, p["w_k"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    v = jnp.einsum("blf,fd->bld", k, p["w_v"].astype(x.dtype))
+    r = jax.nn.sigmoid(jnp.einsum("bld,de->ble", xr, p["w_r"].astype(x.dtype)))
+    return r * v, x[:, -1:]

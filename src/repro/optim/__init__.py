@@ -1,0 +1,9 @@
+"""Optimizers with *scheduled decoupled weight decay* (the paper's knob)."""
+from repro.optim.optimizers import (  # noqa: F401
+    OptState,
+    adamw_init,
+    adamw_update,
+    make_optimizer,
+    sgdm_init,
+    sgdm_update,
+)

@@ -1,0 +1,120 @@
+"""SGD-momentum and AdamW as pure pytree transforms.
+
+Weight decay is decoupled and passed PER STEP as a traced scalar — this is how
+the paper's codistillation-aware decay schedule (5e-4 -> 1e-5 -> 0 at the LR
+milestones) enters the update without recompilation. An optional ``trainable``
+mask (same pytree, 0/1 leaves) supports the Section-5.1 frozen-bottleneck
+experiments.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: PyTree              # momentum / first moment
+    v: Optional[PyTree]    # second moment (adamw only)
+
+
+def _tmap(f, *trees, **kw):
+    return jax.tree.map(f, *trees, **kw)
+
+
+# ----------------------------------------------------------------------------
+# SGD + momentum (the paper's vision optimizer)
+# ----------------------------------------------------------------------------
+
+def sgdm_init(params: PyTree, dtype=jnp.float32) -> OptState:
+    m = _tmap(lambda p: jnp.zeros_like(p, dtype), params)
+    return OptState(jnp.zeros((), jnp.int32), m, None)
+
+
+def sgdm_update(params: PyTree, grads: PyTree, state: OptState, lr,
+                weight_decay=0.0, momentum: float = 0.9,
+                trainable: Optional[PyTree] = None) -> Tuple[PyTree, OptState]:
+    lr = jnp.asarray(lr, jnp.float32)
+    wd = jnp.asarray(weight_decay, jnp.float32)
+
+    def upd(p, g, m):
+        g32 = g.astype(jnp.float32) + wd * p.astype(jnp.float32)
+        m_new = momentum * m + g32
+        p_new = p.astype(jnp.float32) - lr * m_new
+        return p_new.astype(p.dtype), m_new.astype(m.dtype)
+
+    out = _tmap(upd, params, grads, state.m)
+    new_params = _tmap(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = _tmap(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    if trainable is not None:
+        new_params = _tmap(lambda n, o, t: jnp.where(t > 0, n, o),
+                           new_params, params, trainable)
+    return new_params, OptState(state.step + 1, new_m, None)
+
+
+# ----------------------------------------------------------------------------
+# AdamW (the paper's NMT optimizer)
+# ----------------------------------------------------------------------------
+
+def adamw_init(params: PyTree, dtype=jnp.float32) -> OptState:
+    m = _tmap(lambda p: jnp.zeros_like(p, dtype), params)
+    v = _tmap(lambda p: jnp.zeros_like(p, dtype), params)
+    return OptState(jnp.zeros((), jnp.int32), m, v)
+
+
+def adamw_update(params: PyTree, grads: PyTree, state: OptState, lr,
+                 weight_decay=0.0, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8,
+                 trainable: Optional[PyTree] = None) -> Tuple[PyTree, OptState]:
+    lr = jnp.asarray(lr, jnp.float32)
+    wd = jnp.asarray(weight_decay, jnp.float32)
+    t = state.step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        mh = m_new / bc1
+        vh = v_new / bc2
+        p_new = (p.astype(jnp.float32)
+                 - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p.astype(jnp.float32)))
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = _tmap(upd, params, grads, state.m, state.v)
+    is_t = lambda x: isinstance(x, tuple)
+    new_params = _tmap(lambda o: o[0], out, is_leaf=is_t)
+    new_m = _tmap(lambda o: o[1], out, is_leaf=is_t)
+    new_v = _tmap(lambda o: o[2], out, is_leaf=is_t)
+    if trainable is not None:
+        new_params = _tmap(lambda n, o, tr: jnp.where(tr > 0, n, o),
+                           new_params, params, trainable)
+    return new_params, OptState(state.step + 1, new_m, new_v)
+
+
+# ----------------------------------------------------------------------------
+# factory
+# ----------------------------------------------------------------------------
+
+def make_optimizer(kind: str, **kw) -> Tuple[Callable, Callable]:
+    """Returns (init_fn(params), update_fn(params, grads, state, lr, wd)).
+
+    ``dtype`` sets the moment-buffer dtype (fp32 default; bf16 halves the
+    optimizer-state HBM for the largest dry-run configs)."""
+    dtype = jnp.dtype(kw.get("dtype", jnp.float32))
+    if kind == "sgdm":
+        momentum = kw.get("momentum", 0.9)
+        return (lambda p: sgdm_init(p, dtype),
+                lambda p, g, s, lr, wd, trainable=None: sgdm_update(
+                    p, g, s, lr, wd, momentum, trainable))
+    if kind == "adamw":
+        b1, b2 = kw.get("b1", 0.9), kw.get("b2", 0.95)
+        return (lambda p: adamw_init(p, dtype),
+                lambda p, g, s, lr, wd, trainable=None: adamw_update(
+                    p, g, s, lr, wd, b1, b2, trainable=trainable))
+    raise ValueError(kind)

@@ -1,0 +1,73 @@
+"""Batched serving engine: prefill + decode with jitted step functions.
+
+Serves a single model (codistillation is a *training* mechanism — one of its
+selling points, Section 6.6, is that only one model is needed at inference).
+Supports greedy and temperature sampling, batched requests of equal prompt
+length (continuous batching is out of scope for the dry-run container; the
+decode step itself is batch-first and cache-slot-addressable, which is the
+substrate continuous batching needs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass
+class GenerationResult:
+    tokens: jax.Array        # (B, prompt+generated)
+    prompt_len: int
+    logprobs: Optional[jax.Array] = None
+
+
+class Engine:
+    def __init__(self, model, params: PyTree, cache_dtype=jnp.float32):
+        self.model = model
+        self.params = params
+        self.cache_dtype = cache_dtype
+        self._prefill = jax.jit(self._prefill_impl, static_argnums=(2,))
+        self._decode = jax.jit(self._decode_impl)
+
+    # -- jitted internals ----------------------------------------------------
+    def _prefill_impl(self, params, batch, cap):
+        return self.model.prefill(params, batch, cap,
+                                  cache_dtype=self.cache_dtype)
+
+    def _decode_impl(self, params, cache, tokens, pos):
+        return self.model.decode(params, cache, tokens, pos)
+
+    # -- public API ------------------------------------------------------------
+    def generate(self, batch: Dict, max_new_tokens: int,
+                 temperature: float = 0.0, seed: int = 0) -> GenerationResult:
+        """batch: model inputs incl. 'tokens' (B, prompt_len) prompts."""
+        prompt = batch["tokens"]
+        b, prompt_len = prompt.shape
+        # VLM: the patch prefix occupies cache slots before the prompt
+        prefix = getattr(self.model.cfg, "num_patches", 0) or 0
+        if "patches" not in batch:
+            prefix = 0
+        cap = prefix + prompt_len + max_new_tokens
+        logits, cache = self._prefill(self.params, batch, cap)
+        key = jax.random.key(seed)
+        out_tokens = [prompt]
+        tok = self._select(logits[:, -1], temperature, key)
+        out_tokens.append(tok)
+        for i in range(1, max_new_tokens):
+            pos = jnp.asarray(prefix + prompt_len + i - 1, jnp.int32)
+            logits, cache = self._decode(self.params, cache, tok, pos)
+            key, sub = jax.random.split(key)
+            tok = self._select(logits[:, -1], temperature, sub)
+            out_tokens.append(tok)
+        return GenerationResult(jnp.concatenate(out_tokens, axis=1), prompt_len)
+
+    @staticmethod
+    def _select(logits: jax.Array, temperature: float, key) -> jax.Array:
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature)[:, None].astype(jnp.int32)

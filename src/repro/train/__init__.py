@@ -1,0 +1,22 @@
+from repro.train.loop import (  # noqa: F401
+    History,
+    stack_batches,
+    train_allreduce,
+    train_codist,
+)
+from repro.train.state import (  # noqa: F401
+    CodistState,
+    TrainState,
+    init_codist_state,
+    init_train_state,
+)
+from repro.train.steps import (  # noqa: F401
+    make_allreduce_step,
+    make_codist_checkpoint_step,
+    make_codist_eval_step,
+    make_codist_pipelined_step,
+    make_codist_step,
+    make_eval_step,
+    make_schedules,
+    refresh_stale,
+)

@@ -1,0 +1,160 @@
+"""Host training loops: metric logging, StepPlan-driven variant dispatch,
+periodic checkpoint exchange, eval, and the Fig.-7 parameter-distance probe.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CodistConfig, TrainConfig
+from repro.core.codistillation import param_distance_from
+from repro.core.exchange import StepPlan
+from repro.train import steps as steps_mod
+from repro.train.state import CodistState, TrainState
+
+PyTree = Any
+
+
+@dataclass
+class History:
+    records: List[Dict[str, float]] = field(default_factory=list)
+
+    def log(self, step: int, metrics: Dict[str, Any], **extra):
+        rec = {"step": step}
+        for k, v in metrics.items():
+            try:
+                arr = jnp.asarray(v)
+                if arr.ndim == 0:
+                    rec[k] = float(arr)
+                else:
+                    for i, x in enumerate(arr.reshape(-1)):
+                        rec[f"{k}_{i}"] = float(x)
+            except Exception:
+                pass
+        rec.update(extra)
+        self.records.append(rec)
+
+    def last(self, key: str) -> float:
+        for rec in reversed(self.records):
+            if key in rec:
+                return rec[key]
+        raise KeyError(key)
+
+    def series(self, key: str) -> List[float]:
+        return [r[key] for r in self.records if key in r]
+
+
+def train_allreduce(model, tc: TrainConfig, batches: Iterator[Dict],
+                    eval_batches: Optional[Callable[[int], Dict]] = None,
+                    eval_every: int = 0, log_every: int = 10,
+                    state: Optional[TrainState] = None,
+                    trainable: Optional[PyTree] = None,
+                    track_param_distance: bool = False) -> tuple:
+    from repro.optim import make_optimizer
+    from repro.train.state import init_train_state
+    opt_init, _ = make_optimizer(tc.optimizer, momentum=tc.momentum,
+                                 b1=tc.adam_b1, b2=tc.adam_b2)
+    if state is None:
+        state = init_train_state(model, jax.random.key(tc.seed), opt_init)
+    params0 = jax.tree.map(jnp.array, state.params) if track_param_distance else None
+    step_fn = jax.jit(steps_mod.make_allreduce_step(model, tc, trainable))
+    eval_fn = jax.jit(steps_mod.make_eval_step(model))
+    hist = History()
+    for k in range(tc.total_steps):
+        state, metrics = step_fn(state, next(batches))
+        if k % log_every == 0 or k == tc.total_steps - 1:
+            extra = {}
+            if track_param_distance:
+                extra["param_distance"] = float(
+                    param_distance_from(state.params, params0))
+            if eval_every and eval_batches is not None and (
+                    k % eval_every == 0 or k == tc.total_steps - 1):
+                metrics = {**metrics, **eval_fn(state.params, eval_batches(k))}
+            hist.log(k, metrics, **extra)
+    return state, hist
+
+
+def train_codist(model, codist: CodistConfig, tc: TrainConfig,
+                 batches: Callable[[int], Dict],
+                 eval_batches: Optional[Callable[[int], Dict]] = None,
+                 eval_every: int = 0, log_every: int = 10,
+                 state: Optional[CodistState] = None,
+                 trainable: Optional[PyTree] = None,
+                 track_param_distance: bool = False) -> tuple:
+    """Generic codistillation loop.
+
+    ``batches(step)`` returns the stacked batch dict (leading n axis) for that
+    step — it owns coordinated vs. independent sampling.
+    """
+    from repro.optim import make_optimizer
+    from repro.train.state import init_codist_state
+    opt_init, _ = make_optimizer(tc.optimizer, momentum=tc.momentum,
+                                 b1=tc.adam_b1, b2=tc.adam_b2)
+    ckpt_mode = codist.mode == "checkpoints"
+    if state is None:
+        state = init_codist_state(model, jax.random.key(tc.seed),
+                                  codist.n_models, opt_init,
+                                  with_stale=ckpt_mode)
+    params0 = jax.tree.map(jnp.array, state.params) if track_param_distance else None
+
+    if codist.pipelined:
+        step_on = jax.jit(steps_mod.make_codist_pipelined_step(model, codist, tc))
+        step_off = None
+    elif ckpt_mode:
+        step_on = jax.jit(steps_mod.make_codist_checkpoint_step(
+            model, codist, tc, trainable))
+        step_off = None
+    else:
+        step_on = jax.jit(steps_mod.make_codist_step(model, codist, tc, True,
+                                                     trainable))
+        step_off = jax.jit(steps_mod.make_codist_step(model, codist, tc, False,
+                                                      trainable))
+    eval_fn = jax.jit(steps_mod.make_codist_eval_step(model))
+    hist = History()
+    comm_events = 0
+    for k in range(tc.total_steps):
+        batch_all = batches(k)
+        plan = StepPlan.for_step(codist, k)
+        if codist.pipelined:
+            if state.peer is None:
+                n = codist.n_models
+                # peer logits shape: infer from a dry forward on model 0
+                logits_shape = jax.eval_shape(
+                    lambda p, b: model.forward(
+                        jax.tree.map(lambda x: x[0], p),
+                        jax.tree.map(lambda x: x[0], b))[0],
+                    state.params, batch_all).shape
+                state = state._replace(peer=steps_mod.init_peer_state(
+                    batch_all, (n, *logits_shape)))
+            state, metrics = step_on(state, batch_all)
+            comm_events += 1
+        elif ckpt_mode:
+            if plan.exchange:
+                state = steps_mod.refresh_stale(state)
+                comm_events += 1
+            state, metrics = step_on(state, batch_all)
+        else:
+            if plan.distill:
+                state, metrics = step_on(state, batch_all)
+                comm_events += 1
+            else:
+                state, metrics = step_off(state, batch_all)
+        if k % log_every == 0 or k == tc.total_steps - 1:
+            extra = {"comm_events": comm_events}
+            if track_param_distance:
+                extra["param_distance"] = float(
+                    param_distance_from(state.params, params0))
+            if eval_every and eval_batches is not None and (
+                    k % eval_every == 0 or k == tc.total_steps - 1):
+                metrics = {**metrics, **eval_fn(state.params, eval_batches(k))}
+            hist.log(k, metrics, **extra)
+    return state, hist
+
+
+def stack_batches(batch_list: List[Dict]) -> Dict:
+    """[batch_i] -> stacked dict with leading n axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *batch_list)

@@ -1,0 +1,46 @@
+"""Train states (single-model and stacked codistillation)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codistillation import init_stacked
+from repro.optim import OptState
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt: OptState
+    step: jax.Array  # int32 scalar
+
+
+class CodistState(NamedTuple):
+    """State for n codistilling models: every leaf of ``params``/``opt`` has a
+    leading axis of size n (sharded over the "pod" mesh axis in production).
+
+    ``stale`` (checkpoint mode): replica set as of the last exchange, same
+    stacked layout but conceptually replicated to every group.
+    ``peer`` (pipelined prediction mode): previous exchange's logits + batch.
+    """
+    params: PyTree
+    opt: OptState
+    step: jax.Array
+    stale: Optional[PyTree] = None
+    peer: Optional[PyTree] = None
+
+
+def init_train_state(model, key: jax.Array, opt_init) -> TrainState:
+    params = model.init(key)
+    return TrainState(params, opt_init(params), jnp.zeros((), jnp.int32))
+
+
+def init_codist_state(model, key: jax.Array, n: int, opt_init,
+                      with_stale: bool = False) -> CodistState:
+    params = init_stacked(model.init, key, n)
+    opt = opt_init(params)
+    stale = jax.tree.map(jnp.array, params) if with_stale else None
+    return CodistState(params, opt, jnp.zeros((), jnp.int32), stale, None)

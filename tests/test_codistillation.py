@@ -1,0 +1,202 @@
+"""Core codistillation semantics (Algorithm 1) and exchange strategies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CodistConfig
+from repro.core import codistillation as cd
+from repro.core import schedules as sched
+from repro.core.exchange import StepPlan
+
+
+def _logits(key, n=2, b=4, s=8, v=32):
+    return jax.random.normal(jax.random.key(key), (n, b, s, v))
+
+
+def _labels(key, n=2, b=4, s=8, v=32):
+    return jax.random.randint(jax.random.key(key), (n, b, s), 0, v)
+
+
+class TestDistillLosses:
+    def test_mse_matches_manual(self):
+        a = jax.random.normal(jax.random.key(0), (4, 8, 16))
+        b = jax.random.normal(jax.random.key(1), (4, 8, 16))
+        got = cd.distill_mse(a, b)
+        want = jnp.mean((a - b) ** 2)
+        assert jnp.allclose(got, want, atol=1e-6)
+
+    def test_zero_at_equality(self):
+        a = jax.random.normal(jax.random.key(0), (4, 8, 16))
+        for kind in ("mse", "kl"):
+            assert float(cd.distill_pair(kind, a, a)) == pytest.approx(
+                0.0, abs=1e-5)
+
+    def test_kl_nonnegative(self):
+        a = _logits(0)[0]
+        b = _logits(1)[0]
+        assert float(cd.distill_kl(a, b)) >= 0.0
+
+    def test_mask_excludes_tokens(self):
+        a = jax.random.normal(jax.random.key(0), (2, 4, 8))
+        b = a.at[:, 2:].add(100.0)  # only masked-out positions differ
+        mask = jnp.array([[1, 1, 0, 0], [1, 1, 0, 0]], jnp.float32)
+        assert float(cd.distill_mse(a, b, mask)) == pytest.approx(0.0)
+
+
+class TestCodistLoss:
+    def test_alpha_zero_is_independent_training(self):
+        cfg = CodistConfig(n_models=2)
+        lg, lb = _logits(0), _labels(1)
+        total, m = cd.codist_loss(cfg, lg, lb, alpha=0.0)
+        want = jnp.mean(jnp.stack([
+            cd.cross_entropy(lg[0], lb[0]), cd.cross_entropy(lg[1], lb[1])]))
+        assert jnp.allclose(total, want, atol=1e-6)
+
+    def test_alpha_linearity(self):
+        cfg = CodistConfig(n_models=2)
+        lg, lb = _logits(0), _labels(1)
+        t0, m0 = cd.codist_loss(cfg, lg, lb, alpha=0.0)
+        t1, m1 = cd.codist_loss(cfg, lg, lb, alpha=1.0)
+        t2, m2 = cd.codist_loss(cfg, lg, lb, alpha=2.0)
+        assert jnp.allclose(t2 - t0, 2 * (t1 - t0), atol=1e-5)
+
+    def test_gradient_matches_algorithm1(self):
+        """grad wrt model i only flows through its own logits (stop_gradient
+        on targets): d/dlg_i [CE_i + alpha*mean_j MSE(lg_i, sg(lg_j))]."""
+        cfg = CodistConfig(n_models=2, distill_loss="mse")
+        lg, lb = _logits(0), _labels(1)
+        alpha = 0.7
+
+        def total(l):
+            return cd.codist_loss(cfg, l, lb, alpha)[0]
+
+        g = jax.grad(total)(lg)
+
+        def manual_i(l_i, l_j, lb_i):
+            return (cd.cross_entropy(l_i, lb_i)
+                    + alpha * cd.distill_mse(l_i, jax.lax.stop_gradient(l_j)))
+
+        g0 = jax.grad(lambda l: manual_i(l, lg[1], lb[0]) / 2)(lg[0])
+        np.testing.assert_allclose(np.asarray(g[0]), np.asarray(g0),
+                                   rtol=1e-4, atol=1e-6)
+
+    def test_n_way_pairwise_targets(self):
+        """Checkpoint-mode pairwise targets [i, j] are honored."""
+        cfg = CodistConfig(n_models=3)
+        lg = _logits(0, n=3)
+        lb = _labels(1, n=3)
+        pw = jax.random.normal(jax.random.key(2), (3, 3, 4, 8, 32))
+        total, m = cd.codist_loss(cfg, lg, lb, 1.0, peer_pairwise=pw)
+        d0 = (cd.distill_mse(lg[0], pw[0, 1]) + cd.distill_mse(lg[0], pw[0, 2])) / 2
+        assert jnp.allclose(m["distill_loss_per_model"][0], d0, atol=1e-5)
+
+    def test_compressed_topk_targets(self):
+        cfg = CodistConfig(n_models=2, compression="topk", topk=8)
+        lg, lb = _logits(0, v=64), _labels(1, v=64)
+        total, m = cd.codist_loss(cfg, lg, lb, 1.0)
+        assert bool(jnp.isfinite(total))
+        # exact-equality logits => zero distill loss even compressed
+        same = jnp.stack([lg[0], lg[0]])
+        _, m2 = cd.codist_loss(cfg, same, lb, 1.0)
+        assert float(m2["distill_loss"]) == pytest.approx(0.0, abs=1e-6)
+
+    def test_subsample_compression(self):
+        cfg = CodistConfig(n_models=2, compression="subsample", subsample=4)
+        lg, lb = _logits(0), _labels(1)
+        total, _ = cd.codist_loss(cfg, lg, lb, 1.0)
+        assert bool(jnp.isfinite(total))
+
+
+class TestCrossEntropy:
+    def test_matches_onehot_definition(self):
+        v = 16
+        lg = jax.random.normal(jax.random.key(0), (4, 6, v))
+        lb = jax.random.randint(jax.random.key(1), (4, 6), 0, v)
+        got = cd.cross_entropy(lg, lb)
+        p = jax.nn.log_softmax(lg, -1)
+        want = -jnp.mean(jnp.take_along_axis(p, lb[..., None], -1))
+        assert jnp.allclose(got, want, atol=1e-5)
+
+    def test_label_smoothing_increases_loss_at_confidence(self):
+        v = 8
+        lb = jnp.zeros((2, 4), jnp.int32)
+        lg = jax.nn.one_hot(lb, v) * 20.0
+        l0 = cd.cross_entropy(lg, lb, 0.0)
+        l1 = cd.cross_entropy(lg, lb, 0.1)
+        assert float(l1) > float(l0)
+
+
+class TestSchedules:
+    def test_wd_schedule_paper_values(self):
+        """5e-4 -> 1e-5 -> 0 at the LR milestones (Section 4.1)."""
+        total = 100
+        wd = lambda s: float(sched.scheduled_weight_decay(
+            s, total, (5e-4, 1e-5, 0.0), (0.5, 0.75)))
+        assert wd(0) == pytest.approx(5e-4)
+        assert wd(49) == pytest.approx(5e-4)
+        assert wd(50) == pytest.approx(1e-5)
+        assert wd(75) == pytest.approx(0.0)
+
+    def test_alpha_growth_nmt(self):
+        """alpha grows 1.1x per epoch (A.3)."""
+        a = lambda s: float(sched.alpha_schedule(s, 1.0, 1.1, steps_per_epoch=10))
+        assert a(0) == pytest.approx(1.0)
+        assert a(10) == pytest.approx(1.1)
+        assert a(25) == pytest.approx(1.1 ** 2)
+
+    def test_alpha_burn_in(self):
+        a = sched.alpha_schedule(jnp.arange(10), 1.0, 1.0, 1, burn_in_steps=5)
+        assert float(a[4]) == 0.0 and float(a[5]) == 1.0
+
+    def test_stepwise_lr(self):
+        lr = lambda s: float(sched.stepwise_lr(s, 1.0, 100, (0.5, 0.75), 0.1))
+        assert lr(10) == pytest.approx(1.0)
+        assert lr(60) == pytest.approx(0.1)
+        assert lr(80) == pytest.approx(0.01)
+
+    def test_linear_scaling_rule(self):
+        assert sched.linear_scaled_lr(0.1, 512) == pytest.approx(0.2)
+
+    def test_label_smoothing_decays_to_zero(self):
+        ls = sched.decayed_label_smoothing(jnp.array([0, 100]), 100, 0.1)
+        assert float(ls[0]) == pytest.approx(0.1)
+        assert float(ls[1]) == pytest.approx(0.0)
+
+
+class TestStepPlan:
+    def test_predictions_period(self):
+        cfg = CodistConfig(n_models=2, mode="predictions", period=5)
+        plans = [StepPlan.for_step(cfg, k) for k in range(10)]
+        assert [p.distill for p in plans] == [True, False, False, False, False] * 2
+        assert [p.exchange for p in plans] == [p.distill for p in plans]
+
+    def test_checkpoints_distill_every_step(self):
+        cfg = CodistConfig(n_models=2, mode="checkpoints", period=5)
+        plans = [StepPlan.for_step(cfg, k) for k in range(10)]
+        assert all(p.distill for p in plans)
+        assert sum(p.exchange for p in plans) == 2
+
+    def test_burn_in(self):
+        cfg = CodistConfig(n_models=2, burn_in_steps=3)
+        assert not StepPlan.for_step(cfg, 2).distill
+        assert StepPlan.for_step(cfg, 3).distill
+
+    def test_single_model_never_distills(self):
+        cfg = CodistConfig(n_models=1)
+        assert not StepPlan.for_step(cfg, 0).distill
+
+
+def test_param_distance():
+    p0 = {"a": jnp.zeros((3,)), "b": jnp.zeros((2,))}
+    p1 = {"a": jnp.ones((3,)) * 2, "b": jnp.zeros((2,))}
+    assert float(cd.param_distance_from(p1, p0)) == pytest.approx(
+        np.sqrt(12.0))
+
+
+def test_init_stacked_models_differ():
+    def init(key):
+        return {"w": jax.random.normal(key, (4, 4))}
+    stacked = cd.init_stacked(init, jax.random.key(0), 3)
+    assert stacked["w"].shape == (3, 4, 4)
+    assert not jnp.allclose(stacked["w"][0], stacked["w"][1])

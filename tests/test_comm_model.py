@@ -1,0 +1,68 @@
+"""Section-3 communication model — anchored to the paper's own numbers."""
+import pytest
+
+from repro.configs import CodistConfig, get_config
+from repro.core import comm_model as cm
+
+
+def test_paper_resnet50_worked_example():
+    """b_model = 8e8 bits, b_pred = 3.2e4 bits, B = 256 (Section 3 / Fig 1)."""
+    n = cm.paper_resnet50_numbers()
+    assert n["all_reduce"] == pytest.approx(1.6e9)
+    # predictions every iteration: (2-1) * 3.2e4 * 256 = 8.192e6
+    assert n["pred_T1"] == pytest.approx(8.192e6)
+    assert n["pred_T1_ratio"] == pytest.approx(195.3, rel=1e-3)
+    # every 5 iterations: ~977x fewer bits — the paper's "up to 1000x"
+    assert n["pred_T5_ratio"] == pytest.approx(976.5, rel=1e-3)
+    assert n["pred_T100_ratio"] == pytest.approx(19531.25, rel=1e-3)
+    # checkpoints every 625 iterations: (n-1) * b_model / T
+    assert n["ckpt_T625"] == pytest.approx(8e8 / 625)
+    assert n["ckpt_T625_ratio"] == pytest.approx(1250.0)
+
+
+def test_checkpoint_cheaper_than_allreduce_iff_condition():
+    """(n-1)/T < 2 is exactly the paper's break-even condition."""
+    b_model = 1e9
+    ar = cm.allreduce_bits(b_model)
+    for n, t in [(2, 1), (3, 1), (5, 2), (2, 50), (9, 4)]:
+        ck = cm.codist_checkpoint_bits(b_model, n, t)
+        cheaper = ck.bits_per_iter_per_device < ar.bits_per_iter_per_device
+        assert cheaper == ((n - 1) / t < 2)
+
+
+def test_lm_prediction_bits_dwarf_resnet():
+    """Hardware-adaptation finding: raw logits exchange at LM vocab sizes is
+    orders of magnitude heavier than the ResNet case the paper studied."""
+    cfg = get_config("qwen2-7b")
+    lm_bits = cm.prediction_bits_lm(cfg, seq_len=4096)
+    assert lm_bits > 1e4 * 3.2e4  # >1e4x the ResNet per-sample prediction
+
+
+def test_compression_recovers_the_win():
+    cfg = get_config("qwen2-7b")
+    raw = cm.prediction_bits_lm(cfg, 4096)
+    topk = cm.prediction_bits_lm(cfg, 4096, compression="topk", topk=64)
+    sub = cm.prediction_bits_lm(cfg, 4096, compression="subsample",
+                                subsample=256)
+    bf16 = cm.prediction_bits_lm(cfg, 4096, logit_bits=32, compression="bf16")
+    assert topk < raw / 500
+    assert sub == pytest.approx(raw * 256 / 4096)
+    assert bf16 == pytest.approx(raw / 2)
+
+
+def test_codist_cost_dispatch():
+    cfg = get_config("qwen1.5-0.5b")
+    ck = cm.codist_cost(cfg, CodistConfig(n_models=2, mode="checkpoints",
+                                          period=50), per_device_batch=8)
+    assert ck.bits_per_iter_per_device == pytest.approx(
+        cm.model_bits(cfg) / 50)
+    pred = cm.codist_cost(cfg, CodistConfig(n_models=4, period=10),
+                          per_device_batch=8, seq_len=128)
+    expected = 3 * cm.prediction_bits_lm(cfg, 128) * 8 / 10
+    assert pred.bits_per_iter_per_device == pytest.approx(expected)
+
+
+def test_ratio_vs():
+    a = cm.CommCost(100.0, "a")
+    b = cm.CommCost(1.0, "b")
+    assert b.ratio_vs(a) == pytest.approx(100.0)

@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned config
+(<=2 layers, d_model<=512, <=4 experts) runs one forward and one train step on
+CPU; output shapes and finiteness are asserted. Full configs are exercised
+only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, TrainConfig, get_config, get_reduced
+from repro.models import build_model
+from repro.train import init_train_state, make_allreduce_step
+from repro.optim import make_optimizer
+
+
+def _batch(cfg, b=2, s=16, key=0):
+    k = jax.random.key(key)
+    batch = {
+        "tokens": jax.random.randint(k, (b, s), 0, cfg.padded_vocab),
+        "labels": jax.random.randint(k, (b, s), 0, cfg.vocab_size),
+        "mask": jnp.ones((b, s), jnp.float32),
+    }
+    if cfg.num_patches:
+        batch["patches"] = 0.1 * jax.random.normal(
+            k, (b, cfg.num_patches, cfg.d_model))
+    if cfg.is_encdec:
+        if cfg.num_audio_frames > 0:
+            batch["frames"] = 0.1 * jax.random.normal(
+                k, (b, cfg.num_audio_frames, cfg.d_model))
+        else:
+            batch["src_tokens"] = jax.random.randint(k, (b, s), 0,
+                                                     cfg.padded_vocab)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_forward_and_train_step(arch):
+    cfg = get_reduced(arch)
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+    model = build_model(cfg)
+    batch = _batch(cfg)
+    params = model.init(jax.random.key(0))
+    logits, aux = model.forward(params, batch)
+    b, s = batch["labels"].shape
+    assert logits.shape == (b, s, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+    assert bool(jnp.isfinite(aux)), f"{arch}: non-finite aux loss"
+
+    tc = TrainConfig(lr=1e-3, total_steps=10, warmup_steps=0,
+                     optimizer="adamw")
+    opt_init, _ = make_optimizer("adamw")
+    state = init_train_state(model, jax.random.key(1), opt_init)
+    step = jax.jit(make_allreduce_step(model, tc))
+    state2, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"])), f"{arch}: non-finite loss"
+    assert int(state2.step) == 1
+    # params actually changed
+    diff = jax.tree.map(lambda a, c: float(jnp.abs(a - c).max()),
+                        state.params, state2.params)
+    assert max(jax.tree.leaves(diff)) > 0, f"{arch}: no param update"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_full_config_exact_assignment(arch):
+    """The registered full configs match the assigned table exactly."""
+    cfg = get_config(arch)
+    table = {
+        "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+        "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+        "internvl2-76b": (80, 8192, 64, 8, 28672, 128256),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+    }
+    l_, d, h, kv, ff, v = table[arch]
+    assert cfg.num_layers == l_ and cfg.d_model == d
+    assert cfg.num_heads == h and cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab_size == v
+    if arch == "arctic-480b":
+        assert cfg.moe.num_experts == 128 and cfg.moe.top_k == 2
+        assert cfg.moe.dense_residual
+    if arch == "jamba-v0.1-52b":
+        assert cfg.attn_layer_period == 8 and cfg.moe.num_experts == 16
+    if arch == "grok-1-314b":
+        assert cfg.moe.num_experts == 8 and cfg.moe.top_k == 2
+    if arch == "whisper-tiny":
+        assert cfg.encoder_layers == 4
+    if arch == "rwkv6-1.6b":
+        assert cfg.family == "ssm" and cfg.rwkv is not None
+    if arch.startswith("qwen"):
+        assert cfg.qkv_bias
+
+
+def test_param_counts_plausible():
+    """Analytic param counts land in the right ballpark for named sizes."""
+    expect = {  # (arch, low, high) in billions
+        "deepseek-67b": (55, 80),
+        "qwen2-7b": (6, 9),
+        "qwen1.5-0.5b": (0.3, 0.8),
+        "qwen1.5-4b": (3, 5),
+        "arctic-480b": (400, 560),
+        "grok-1-314b": (250, 370),
+        "rwkv6-1.6b": (1.2, 2.2),
+        "jamba-v0.1-52b": (40, 65),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count() / 1e9
+        assert lo < n < hi, f"{arch}: {n:.1f}B outside [{lo},{hi}]"

@@ -1,0 +1,100 @@
+"""Pure-python dry-run helper logic (no device mesh)."""
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.base import InputShape
+
+
+def _dr():
+    # import inside: dryrun sets XLA_FLAGS at import, safe (env only)
+    import repro.launch.dryrun as dr
+    return dr
+
+
+class TestMicrobatchPicker:
+    def test_divisibility_preserved(self):
+        dr = _dr()
+        for arch in ("deepseek-67b", "qwen2-7b", "arctic-480b", "whisper-tiny"):
+            cfg = dr.dryrun_config(arch)
+            shape = INPUT_SHAPES["train_4k"]
+            for n in (1, 2):
+                k = dr.pick_microbatch(cfg, shape, 16, n)
+                b = shape.global_batch // n
+                assert b % k == 0
+                assert (b // k) % 16 == 0, (arch, n, k)
+
+    def test_larger_models_get_more_microbatches(self):
+        dr = _dr()
+        shape = INPUT_SHAPES["train_4k"]
+        k_small = dr.pick_microbatch(dr.dryrun_config("whisper-tiny"), shape, 16)
+        k_big = dr.pick_microbatch(dr.dryrun_config("deepseek-67b"), shape, 16)
+        assert k_big > k_small
+
+    def test_decode_shapes_no_microbatch(self):
+        dr = _dr()
+        cfg = dr.dryrun_config("deepseek-67b")
+        k = dr.pick_microbatch(cfg, INPUT_SHAPES["decode_32k"], 16)
+        assert k == 1  # one-token decode has no backward residuals
+
+
+class TestShapeAdaptation:
+    def test_dense_long_context_gets_sliding_window(self):
+        dr = _dr()
+        cfg = dr.adapt_for_shape(dr.dryrun_config("deepseek-67b"), "long_500k")
+        assert cfg.sliding_window == dr.SLIDING_WINDOW_FOR_LONG
+
+    def test_ssm_and_hybrid_keep_native_attention(self):
+        dr = _dr()
+        for arch in ("rwkv6-1.6b", "jamba-v0.1-52b"):
+            cfg = dr.adapt_for_shape(dr.dryrun_config(arch), "long_500k")
+            assert cfg.sliding_window == 0
+
+    def test_train_shapes_unmodified(self):
+        dr = _dr()
+        cfg = dr.adapt_for_shape(dr.dryrun_config("qwen2-7b"), "train_4k")
+        assert cfg.sliding_window == 0
+
+    def test_whisper_long_context_skipped(self):
+        dr = _dr()
+        assert ("whisper-tiny", "long_500k") in dr.SKIP
+
+    def test_coverage_is_39(self):
+        dr = _dr()
+        from repro.configs import ASSIGNED_ARCHS
+        combos = [(a, s) for a in ASSIGNED_ARCHS for s in INPUT_SHAPES
+                  if (a, s) not in dr.SKIP]
+        assert len(combos) == 39
+
+
+class TestInputSpecs:
+    def test_codist_batch_split_and_microbatch(self):
+        from repro.launch import specs as sp
+        cfg = get_config("qwen2-7b")
+        shape = INPUT_SHAPES["train_4k"]
+        b = sp.train_batch_specs(cfg, shape, n_stack=2, microbatch=4)
+        assert b["tokens"].shape == (2, 4, 32, 4096)  # 256/2/4 = 32
+
+    def test_vlm_patch_prefix(self):
+        from repro.launch import specs as sp
+        cfg = get_config("internvl2-76b")
+        shape = INPUT_SHAPES["train_4k"]
+        b = sp.train_batch_specs(cfg, shape)
+        assert b["patches"].shape == (256, 256, 8192)
+        assert b["tokens"].shape[1] + 256 == 4096
+
+    def test_encdec_frames(self):
+        from repro.launch import specs as sp
+        cfg = get_config("whisper-tiny")
+        b = sp.train_batch_specs(cfg, INPUT_SHAPES["train_4k"])
+        assert b["frames"].shape == (256, 1500, 384)
+
+    def test_decode_cache_capacity(self):
+        import jax.numpy as jnp
+        from repro.launch import specs as sp
+        from repro.models import build_model
+        cfg = get_config("qwen1.5-0.5b")
+        model = build_model(cfg)
+        cache = sp.cache_specs(model, cfg, INPUT_SHAPES["decode_32k"])
+        k = cache["sub0"]["k"]
+        assert k.shape == (24, 128, 32768, 16, 64)
+        assert k.dtype == jnp.bfloat16

@@ -1,0 +1,193 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import CodistConfig, get_reduced
+from repro.core import codistillation as cd
+from repro.core import comm_model as cm
+from repro.core import schedules as sched
+from repro.models.rwkv import rwkv_wkv_chunked, rwkv_wkv_sequential
+from repro.models.mamba import mamba_scan, _scan_assoc
+
+S = settings(max_examples=25, deadline=None)
+
+
+class TestCommModelProperties:
+    @S
+    @given(b_model=st.floats(1e3, 1e12), n=st.integers(2, 16),
+           t=st.integers(1, 10000))
+    def test_checkpoint_cost_monotone_in_period(self, b_model, n, t):
+        c1 = cm.codist_checkpoint_bits(b_model, n, t)
+        c2 = cm.codist_checkpoint_bits(b_model, n, t * 2)
+        assert c2.bits_per_iter_per_device == pytest.approx(
+            c1.bits_per_iter_per_device / 2)
+
+    @S
+    @given(b_pred=st.floats(1.0, 1e9), batch=st.integers(1, 4096),
+           n=st.integers(2, 16), t=st.integers(1, 1000))
+    def test_prediction_cost_scales_linearly(self, b_pred, batch, n, t):
+        c = cm.codist_prediction_bits(b_pred, batch, n, t)
+        c2 = cm.codist_prediction_bits(b_pred, batch * 2, n, t)
+        assert c2.bits_per_iter_per_device == pytest.approx(
+            2 * c.bits_per_iter_per_device, rel=1e-9)
+        assert c.bits_per_iter_per_device == pytest.approx(
+            (n - 1) * b_pred * batch / t, rel=1e-9)
+
+
+class TestDistillProperties:
+    @S
+    @given(seed=st.integers(0, 10_000), scale=st.floats(0.1, 10.0))
+    def test_mse_symmetry(self, seed, scale):
+        k1, k2 = jax.random.split(jax.random.key(seed))
+        a = jax.random.normal(k1, (3, 5, 16)) * scale
+        b = jax.random.normal(k2, (3, 5, 16)) * scale
+        assert float(cd.distill_mse(a, b)) == pytest.approx(
+            float(cd.distill_mse(b, a)), rel=1e-5)
+
+    @S
+    @given(seed=st.integers(0, 10_000))
+    def test_kl_nonnegative_and_zero_iff_equal(self, seed):
+        k1, k2 = jax.random.split(jax.random.key(seed))
+        a = jax.random.normal(k1, (2, 4, 12))
+        b = jax.random.normal(k2, (2, 4, 12))
+        assert float(cd.distill_kl(a, b)) >= -1e-6
+        assert float(cd.distill_kl(a, a)) == pytest.approx(0.0, abs=1e-5)
+
+    @S
+    @given(seed=st.integers(0, 10_000), shift=st.floats(-5.0, 5.0))
+    def test_kl_shift_invariance(self, seed, shift):
+        """Adding a constant to all logits leaves KL unchanged (softmax inv)."""
+        k1, k2 = jax.random.split(jax.random.key(seed))
+        a = jax.random.normal(k1, (2, 3, 8))
+        b = jax.random.normal(k2, (2, 3, 8))
+        d1 = float(cd.distill_kl(a, b))
+        d2 = float(cd.distill_kl(a + shift, b + shift))
+        assert d1 == pytest.approx(d2, rel=1e-3, abs=1e-5)
+
+
+class TestScheduleProperties:
+    @S
+    @given(step=st.integers(0, 10_000), total=st.integers(100, 20_000),
+           base=st.floats(1e-5, 1.0))
+    def test_cosine_bounded(self, step, total, base):
+        lr = float(sched.cosine_lr(step, base, total, warmup_steps=10))
+        assert 0.0 <= lr <= base * (1 + 1e-6)
+
+    @S
+    @given(step=st.integers(0, 1000), growth=st.floats(1.0, 1.2))
+    def test_alpha_monotone_nondecreasing(self, step, growth):
+        a1 = float(sched.alpha_schedule(step, 1.0, growth, 10))
+        a2 = float(sched.alpha_schedule(step + 10, 1.0, growth, 10))
+        assert a2 >= a1 - 1e-6
+
+    @S
+    @given(total=st.integers(10, 1000))
+    def test_wd_schedule_is_nonincreasing(self, total):
+        vals = [float(sched.scheduled_weight_decay(s, total)) for s in
+                range(0, total, max(1, total // 17))]
+        assert all(x >= y - 1e-12 for x, y in zip(vals, vals[1:]))
+
+
+class TestScanEquivalence:
+    @S
+    @given(seed=st.integers(0, 1000), chunk=st.sampled_from([4, 8, 16]))
+    def test_rwkv_chunked_equals_sequential(self, seed, chunk):
+        """The chunked wkv form is exactly the recurrence (assoc law)."""
+        b, l, h, hd = 2, 32, 2, 8
+        ks = jax.random.split(jax.random.key(seed), 5)
+        r = jax.random.normal(ks[0], (b, l, h, hd))
+        k = jax.random.normal(ks[1], (b, l, h, hd))
+        v = jax.random.normal(ks[2], (b, l, h, hd))
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, l, h, hd))) * 0.8 + 0.1
+        u = jax.random.normal(ks[4], (h, hd)) * 0.1
+        y1, s1 = rwkv_wkv_sequential(r, k, v, w, u)
+        y2, s2 = rwkv_wkv_chunked(r, k, v, w, u, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   rtol=1e-4, atol=1e-4)
+
+    @S
+    @given(seed=st.integers(0, 1000), chunk=st.sampled_from([4, 8, 32]))
+    def test_mamba_chunked_scan_equals_full(self, seed, chunk):
+        b, l, d, n = 2, 32, 4, 3
+        k1, k2 = jax.random.split(jax.random.key(seed))
+        a_bar = jax.nn.sigmoid(jax.random.normal(k1, (b, l, d, n)))
+        bx = jax.random.normal(k2, (b, l, d, n))
+        h_full = _scan_assoc(a_bar, bx)
+        h_chunk = mamba_scan(a_bar, bx, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(h_full), np.asarray(h_chunk),
+                                   rtol=1e-4, atol=1e-5)
+
+    @S
+    @given(seed=st.integers(0, 1000))
+    def test_rwkv_state_carry_composition(self, seed):
+        """wkv over [x1;x2] == wkv(x2, s0=wkv(x1).state) — decode correctness."""
+        b, l, h, hd = 1, 16, 2, 4
+        ks = jax.random.split(jax.random.key(seed), 5)
+        r = jax.random.normal(ks[0], (b, l, h, hd))
+        k = jax.random.normal(ks[1], (b, l, h, hd))
+        v = jax.random.normal(ks[2], (b, l, h, hd))
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, l, h, hd))) * 0.8 + 0.1
+        u = jax.random.normal(ks[4], (h, hd)) * 0.1
+        y_full, s_full = rwkv_wkv_sequential(r, k, v, w, u)
+        half = l // 2
+        y1, s1 = rwkv_wkv_sequential(r[:, :half], k[:, :half], v[:, :half],
+                                     w[:, :half], u)
+        y2, s2 = rwkv_wkv_sequential(r[:, half:], k[:, half:], v[:, half:],
+                                     w[:, half:], u, s0=s1)
+        np.testing.assert_allclose(np.asarray(y_full[:, half:]),
+                                   np.asarray(y2), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestOptimizerProperties:
+    @S
+    @given(seed=st.integers(0, 1000), lr=st.floats(1e-4, 1e-1))
+    def test_sgd_zero_grad_zero_wd_is_identity(self, seed, lr):
+        from repro.optim import make_optimizer
+        params = {"w": jax.random.normal(jax.random.key(seed), (4,))}
+        init, update = make_optimizer("sgdm")
+        state = init(params)
+        grads = {"w": jnp.zeros((4,))}
+        new, _ = update(params, grads, state, lr, 0.0)
+        np.testing.assert_allclose(np.asarray(new["w"]),
+                                   np.asarray(params["w"]))
+
+    @S
+    @given(seed=st.integers(0, 1000))
+    def test_weight_decay_shrinks_params(self, seed):
+        from repro.optim import make_optimizer
+        params = {"w": jax.random.normal(jax.random.key(seed), (8,)) + 5.0}
+        init, update = make_optimizer("sgdm")
+        grads = {"w": jnp.zeros((8,))}
+        new, _ = update(params, grads, init(params), 0.1, 0.5)
+        assert float(jnp.linalg.norm(new["w"])) < float(
+            jnp.linalg.norm(params["w"]))
+
+
+class TestMicrobatchEquivalence:
+    @S
+    @given(seed=st.integers(0, 100))
+    def test_grad_accumulation_matches_full_batch(self, seed):
+        """k-microbatch fp32 accumulation == full-batch gradient (linearity
+        of the mean-CE loss in the batch axis)."""
+        from repro.train.steps import _grads_with_metrics
+        w0 = jax.random.normal(jax.random.key(seed), (6, 4))
+        x = jax.random.normal(jax.random.key(seed + 1), (8, 6))
+        y = jax.random.randint(jax.random.key(seed + 2), (8,), 0, 4)
+
+        def loss_fn(params, batch):
+            logits = batch["x"] @ params
+            l = cd.cross_entropy(logits, batch["y"])
+            return l, {"loss": l}
+
+        g_full, _ = _grads_with_metrics(loss_fn, w0, {"x": x, "y": y}, 1)
+        mb = {"x": x.reshape(4, 2, 6), "y": y.reshape(4, 2)}
+        g_acc, _ = _grads_with_metrics(loss_fn, w0, mb, 4)
+        np.testing.assert_allclose(np.asarray(g_full), np.asarray(g_acc),
+                                   rtol=1e-5, atol=1e-6)

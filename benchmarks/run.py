@@ -1,8 +1,12 @@
 """Benchmark harness — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,fig7]
+                                            [--json PATH]
 
-Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
+Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally writes
+the rows as a JSON document (the committed ``BENCH_throughput.json`` perf
+trajectory is ``--only throughput --quick --json BENCH_throughput.json``).
+Mapping to the paper:
     fig1        communication trade-off (analytic + compiled-HLO cross-pod bytes)
     fig2        regularization-schedule necessity (constant vs decayed WD)
     table1      batch-size linear scaling under codistillation
@@ -16,6 +20,8 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 import traceback
@@ -43,11 +49,14 @@ def main() -> None:
                     help="reduced step counts for CI")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of benchmark names")
+    ap.add_argument("--json", default="",
+                    help="also write all rows to this JSON file")
     args = ap.parse_args()
     only = set(filter(None, args.only.split(",")))
 
     print("name,us_per_call,derived")
     failures = 0
+    all_rows = []
     for name, modpath in MODULES:
         if only and name not in only:
             continue
@@ -57,11 +66,27 @@ def main() -> None:
             mod = importlib.import_module(modpath)
             rows = mod.run(quick=args.quick)
             emit(rows)
+            all_rows.extend(rows)
             print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
         except Exception as e:
             failures += 1
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        import jax
+        doc = {
+            "backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "python_version": platform.python_version(),
+            "quick": bool(args.quick),
+            "rows": [{"name": r["name"],
+                      "us_per_call": round(float(r.get("us_per_call", 0)), 1),
+                      "derived": str(r["derived"])} for r in all_rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"# wrote {args.json} ({len(all_rows)} rows)", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -53,6 +53,7 @@ def run(quick: bool = False) -> List[Dict]:
                 r["derived"] = f"{r['us_per_call'] / base_us:.2f}x_plain"
 
     # kernels vs jnp references (interpret mode: correctness-path timing only)
+    from repro.core import codistillation as cd
     from repro.kernels import ops as kops
     from repro.kernels import ref as kref
     t, v = (256, 512) if quick else (512, 2048)
@@ -64,9 +65,37 @@ def run(quick: bool = False) -> List[Dict]:
     _, us_r = timed(lambda: kref.cross_entropy_ref(lg, lb), iters=2)
     rows.append({"name": "throughput/fused_ce_interp_vs_ref",
                  "us_per_call": us_k, "derived": f"{us_k / us_r:.1f}x_ref"})
-    _, us_k = timed(lambda: kops.distill_loss_tokens(lg, tgt, interpret=True),
-                    iters=2)
-    _, us_r = timed(lambda: kref.distill_mse_ref(lg, tgt), iters=2)
-    rows.append({"name": "throughput/fused_distill_interp_vs_ref",
-                 "us_per_call": us_k, "derived": f"{us_k / us_r:.1f}x_ref"})
+    # both paper loss variants: mse (A.3) and kl (Anil-style)
+    for mode in ("mse", "kl"):
+        _, us_k = timed(lambda m=mode: kops.distill_loss_tokens(
+            lg, tgt, mode=m, interpret=True), iters=2)
+        ref_fn = kref.distill_mse_ref if mode == "mse" else kref.distill_kl_ref
+        _, us_r = timed(lambda f=ref_fn: f(lg, tgt), iters=2)
+        rows.append({"name": f"throughput/fused_distill_{mode}_interp_vs_ref",
+                     "us_per_call": us_k,
+                     "derived": f"{us_k / us_r:.1f}x_ref"})
+
+    # GRADIENT timings: jax.grad through the custom-VJP kernels vs the jnp
+    # losses (the training path the fused_losses flag switches)
+    grad_pairs = {
+        "ce": (
+            jax.jit(jax.grad(lambda x: kops.fused_cross_entropy_loss(
+                x, lb, 0.1, interpret=True))),
+            jax.jit(jax.grad(lambda x: cd.cross_entropy(x, lb, 0.1,
+                                                        fused=False))),
+        ),
+    }
+    for mode in ("mse", "kl"):
+        ref_loss = cd.distill_mse if mode == "mse" else cd.distill_kl
+        grad_pairs[f"distill_{mode}"] = (
+            jax.jit(jax.grad(lambda x, m=mode: kops.fused_distill_mean(
+                x, tgt, m, interpret=True))),
+            jax.jit(jax.grad(lambda x, f=ref_loss: f(x, tgt, fused=False))),
+        )
+    for name, (fused_g, ref_g) in grad_pairs.items():
+        _, us_k = timed(lambda f=fused_g: f(lg), iters=2)
+        _, us_r = timed(lambda f=ref_g: f(lg), iters=2)
+        rows.append({"name": f"throughput/grad_{name}_fused_vs_jnp",
+                     "us_per_call": us_k,
+                     "derived": f"{us_k / us_r:.1f}x_ref"})
     return rows

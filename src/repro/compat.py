@@ -1,0 +1,30 @@
+"""Compatibility shims for the jax API surface this repo targets.
+
+The codebase is written against the current jax API (``jax.shard_map``,
+``jax.set_mesh``); these helpers fall back to the older spellings so the same
+code runs on the pinned container runtime. Mesh-related shims live in
+``repro.launch.mesh`` (``set_mesh``, ``abstract_mesh``).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """``jax.shard_map`` with fallback to ``jax.experimental.shard_map``.
+
+    ``axis_names`` is the set of MANUAL axes (new-API semantics); on old jax
+    it maps to ``auto = mesh.axis_names - axis_names`` and ``check_vma`` to
+    ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": check_vma}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset(mesh.axis_names) - set(axis_names or mesh.axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)

@@ -244,6 +244,12 @@ class TrainConfig:
     remat: bool = False
     opt_dtype: str = "float32"    # optimizer moment buffers
     accum_dtype: str = "float32"  # microbatch gradient accumulators
+    # Dispatch every training-step loss (task CE + distill D) through the
+    # custom-VJP Pallas kernels in repro.kernels.ops instead of the jnp
+    # paths that materialize (T, V) fp32 temporaries. None => auto: on for
+    # TPU (Mosaic), off on CPU — where forcing True runs the kernels in
+    # interpret mode via auto_interpret() (slow; validation only).
+    fused_losses: Optional[bool] = None
 
 
 def reduced(cfg: ModelConfig, **overrides: Any) -> ModelConfig:

@@ -16,6 +16,11 @@ With coordinated sampling (prediction mode) x_i == x_j, so a single vmap'd
 forward produces every f_j(x_i) needed; ``stop_gradient`` on the target side
 makes one backward pass compute exactly the Algorithm-1 update for all models
 simultaneously.
+
+Loss math dispatches through the ``fused_losses`` flag (see ``_fused_enabled``
+and docs/fused_losses.md): when enabled, the streaming custom-VJP Pallas
+kernels in ``repro.kernels`` replace the jnp paths below, eliminating every
+(T, V) fp32 temporary from the forward and backward of the hot path.
 """
 from __future__ import annotations
 
@@ -24,9 +29,33 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import CodistConfig
 
 PyTree = Any
+
+
+# ----------------------------------------------------------------------------
+# fused-loss dispatch
+# ----------------------------------------------------------------------------
+# Every loss below takes ``fused``: None => auto (on for TPU), bool => forced.
+# When enabled, the streaming custom-VJP Pallas kernels in repro.kernels.ops
+# replace the jnp math — same values and gradients (parity-tested to <=1e-4 in
+# tests/test_kernel_grads.py) without materializing (T, V) fp32 temporaries
+# (logsumexp / softmax / one-hot at vocab width) in forward OR backward.
+
+def _fused_enabled(fused: Optional[bool]) -> bool:
+    if fused is None:
+        # auto: pallas_call carries no SPMD partitioning rule, so when a
+        # tensor-parallel axis is active (vocab-sharded lm head) the kernels
+        # would force a full logits gather — exactly what the one-hot jnp CE
+        # below avoids. Auto keeps the jnp path there; fused=True overrides.
+        from repro.models.sharding_hints import tensor_parallel_active
+        if tensor_parallel_active():
+            return False
+        from repro.kernels.ops import fused_losses_default
+        return fused_losses_default()
+    return bool(fused)
 
 
 # ----------------------------------------------------------------------------
@@ -35,11 +64,15 @@ PyTree = Any
 
 def cross_entropy(logits: jax.Array, labels: jax.Array,
                   label_smoothing: jax.Array | float = 0.0,
-                  mask: Optional[jax.Array] = None) -> jax.Array:
+                  mask: Optional[jax.Array] = None,
+                  fused: Optional[bool] = None) -> jax.Array:
     """Mean token-level CE with optional label smoothing and validity mask.
 
     logits: (..., V) float; labels: (...) int32; mask: (...) broadcastable.
     """
+    if _fused_enabled(fused):
+        from repro.kernels.ops import fused_cross_entropy_loss
+        return fused_cross_entropy_loss(logits, labels, label_smoothing, mask)
     logits = logits.astype(jnp.float32)
     v = logits.shape[-1]
     logz = jax.scipy.special.logsumexp(logits, axis=-1)
@@ -74,8 +107,12 @@ def accuracy(logits: jax.Array, labels: jax.Array,
 # ----------------------------------------------------------------------------
 
 def distill_mse(logits: jax.Array, target_logits: jax.Array,
-                mask: Optional[jax.Array] = None) -> jax.Array:
+                mask: Optional[jax.Array] = None,
+                fused: Optional[bool] = None) -> jax.Array:
     """Mean squared error between logits — the paper's D."""
+    if _fused_enabled(fused):
+        from repro.kernels.ops import fused_distill_mean
+        return fused_distill_mean(logits, target_logits, "mse", mask)
     d = (logits.astype(jnp.float32) - target_logits.astype(jnp.float32)) ** 2
     per_tok = jnp.mean(d, axis=-1)
     if mask is not None:
@@ -86,8 +123,12 @@ def distill_mse(logits: jax.Array, target_logits: jax.Array,
 
 def distill_kl(logits: jax.Array, target_logits: jax.Array,
                mask: Optional[jax.Array] = None,
-               temperature: float = 1.0) -> jax.Array:
+               temperature: float = 1.0,
+               fused: Optional[bool] = None) -> jax.Array:
     """KL(softmax(target) || softmax(logits)) — Zhang et al. / Anil et al.'s D."""
+    if temperature == 1.0 and _fused_enabled(fused):
+        from repro.kernels.ops import fused_distill_mean
+        return fused_distill_mean(logits, target_logits, "kl", mask)
     lt = target_logits.astype(jnp.float32) / temperature
     ls = logits.astype(jnp.float32) / temperature
     p = jax.nn.softmax(lt, axis=-1)
@@ -114,8 +155,11 @@ _DISTILL = {"mse": distill_mse, "kl": distill_kl, "ce": distill_ce}
 
 
 def distill_pair(kind: str, logits: jax.Array, target_logits: jax.Array,
-                 mask: Optional[jax.Array] = None) -> jax.Array:
-    return _DISTILL[kind](logits, target_logits, mask)
+                 mask: Optional[jax.Array] = None,
+                 fused: Optional[bool] = None) -> jax.Array:
+    if kind in ("mse", "kl"):
+        return _DISTILL[kind](logits, target_logits, mask, fused=fused)
+    return _DISTILL[kind](logits, target_logits, mask)  # 'ce': jnp only
 
 
 # ----------------------------------------------------------------------------
@@ -187,7 +231,7 @@ def _compress_stacked(cfg: CodistConfig, targets: jax.Array) -> Dict:
 
         out_specs = jax.tree.map(lambda _: P("pod"),
                                  jax.eval_shape(comp, targets))
-        return jax.shard_map(comp, mesh=mesh, in_specs=P("pod"),
+        return compat.shard_map(comp, mesh=mesh, in_specs=P("pod"),
                              out_specs=out_specs, axis_names={"pod"},
                              check_vma=False)(targets)
     return compress_targets(cfg, targets)
@@ -225,7 +269,7 @@ def _podlocal_codist_terms(cfg: CodistConfig, mesh,
         dist = dist / max(1, n - 1)
         return jnp.stack([task, dist])[None]        # (1, 2) pod-sharded
 
-    rows = jax.shard_map(
+    rows = compat.shard_map(
         per_pod, mesh=mesh,
         in_specs=(P("pod"), P("pod"), P("pod"), P()),
         out_specs=P("pod", None),
@@ -236,12 +280,15 @@ def _podlocal_codist_terms(cfg: CodistConfig, mesh,
 
 
 def distill_vs_compressed(cfg: CodistConfig, logits: jax.Array, wire: Dict,
-                          mask: Optional[jax.Array] = None) -> jax.Array:
+                          mask: Optional[jax.Array] = None,
+                          fused: Optional[bool] = None) -> jax.Array:
     kind = cfg.compression if cfg.compression != "none" else "none"
     if cfg.compression == "subsample" and not cfg.subsample:
         kind = "none"
     if kind in ("none", "bf16"):
-        return distill_pair(cfg.distill_loss, logits, wire["vals"], mask)
+        # full-vocab-width targets: the streaming kernels apply
+        return distill_pair(cfg.distill_loss, logits, wire["vals"], mask,
+                            fused=fused)
     if kind == "topk":
         own = jnp.take_along_axis(logits, wire["idx"], axis=-1)
         if cfg.distill_loss == "mse":
@@ -261,7 +308,9 @@ def distill_vs_compressed(cfg: CodistConfig, logits: jax.Array, wire: Dict,
         sub_mask = None
         if mask is not None:
             sub_mask = mask[..., ::stride][..., :k]
-        return distill_pair(cfg.distill_loss, own, wire["vals"], sub_mask)
+        # subsampled tokens keep full vocab width: kernels still apply
+        return distill_pair(cfg.distill_loss, own, wire["vals"], sub_mask,
+                            fused=fused)
     raise ValueError(kind)
 
 
@@ -277,6 +326,7 @@ def codist_loss(cfg: CodistConfig,
                 mask_all: Optional[jax.Array] = None,
                 peer_logits_all: Optional[jax.Array] = None,
                 peer_pairwise: Optional[jax.Array] = None,
+                fused: Optional[bool] = None,
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Mean over models of (task + alpha * mean_peers D(own, sg(peer))).
 
@@ -285,6 +335,11 @@ def codist_loss(cfg: CodistConfig,
     [i, j] = model j's predictions on model i's batch (checkpoint mode, where
     every group evaluates the stale replicas on its OWN minibatch). Default is
     the live stacked logits (prediction mode with coordinated sampling).
+
+    With ``fused`` enabled (auto on TPU) and a full-vocab-width first peer
+    wire, each model's task CE and first distillation term come from the
+    COMBINED Pallas kernel — one read of that model's (T, V) logits instead
+    of two sweeps.
     """
     n = logits_all.shape[0]
     targets = peer_logits_all if peer_logits_all is not None else logits_all
@@ -319,26 +374,45 @@ def codist_loss(cfg: CodistConfig,
     # so when a pod-axis mesh is active the compression runs inside a narrow
     # shard_map manual over "pod" — correctness identical, schedule pinned.
     wires_all = _compress_stacked(cfg, targets)
+    use_fused = _fused_enabled(fused)
 
     task_losses = []
     distill_losses = []
     for i in range(n):
         m_i = None if mask_all is None else mask_all[i]
-        task_losses.append(cross_entropy(logits_all[i], labels_all[i],
-                                         label_smoothing, m_i))
-        if n > 1:
-            wire_d = []
-            for j in range(n):
-                if j == i:
-                    continue
-                if peer_pairwise is not None:
-                    wire = compress_targets(cfg, peer_pairwise[i, j])
-                else:
-                    wire = jax.tree.map(lambda x: x[j], wires_all)
-                wire_d.append(distill_vs_compressed(cfg, logits_all[i], wire, m_i))
-            distill_losses.append(sum(wire_d) / (n - 1))
+        wires_i = []
+        for j in range(n):
+            if j == i:
+                continue
+            if peer_pairwise is not None:
+                wires_i.append(compress_targets(cfg, peer_pairwise[i, j]))
+            else:
+                wires_i.append(jax.tree.map(lambda x: x[j], wires_all))
+        # hot path: fuse the task CE with the first distillation term so the
+        # student logits are swept once (combined kernel); extra peers reuse
+        # the streaming pairwise kernel.
+        combined = (use_fused and wires_i
+                    and cfg.distill_loss in ("mse", "kl")
+                    and set(wires_i[0]) == {"vals"}
+                    and wires_i[0]["vals"].shape == logits_all[i].shape)
+        if combined:
+            from repro.kernels.ops import fused_ce_distill
+            task_i, d0 = fused_ce_distill(
+                logits_all[i], wires_i[0]["vals"], labels_all[i],
+                mode=cfg.distill_loss, label_smoothing=label_smoothing,
+                mask=m_i)
+            wire_d = [d0] + [distill_vs_compressed(cfg, logits_all[i], w,
+                                                   m_i, fused=use_fused)
+                             for w in wires_i[1:]]
         else:
-            distill_losses.append(jnp.asarray(0.0, jnp.float32))
+            task_i = cross_entropy(logits_all[i], labels_all[i],
+                                   label_smoothing, m_i, fused=use_fused)
+            wire_d = [distill_vs_compressed(cfg, logits_all[i], w, m_i,
+                                            fused=use_fused)
+                      for w in wires_i]
+        task_losses.append(task_i)
+        distill_losses.append(sum(wire_d) / (n - 1) if wire_d
+                              else jnp.asarray(0.0, jnp.float32))
 
     task = jnp.stack(task_losses)
     dist = jnp.stack(distill_losses)

@@ -1,15 +1,28 @@
 """Pallas TPU kernels for the compute hot spots, validated in interpret mode.
 
-  fused_ce        — streaming cross-entropy over vocab tiles (no (T,V) temps)
-  distill_loss    — streaming codistillation D(y, y') (mse / kl)
+  fused_ce        — streaming cross-entropy over vocab tiles, forward +
+                    backward (softmax rebuilt from the saved logZ residual)
+  distill_loss    — streaming codistillation D(y, y') (mse / kl), forward +
+                    backward (five-accumulator KL residuals)
+  combined_loss   — COMBINED CE + distill: one read of each logits tile per
+                    model, both losses and both gradients
   flash_attention — online-softmax GQA attention (causal / sliding window)
 
 Each has a pure-jnp oracle in ``ref.py`` and a jit'd public wrapper in
-``ops.py`` (auto interpret on CPU, Mosaic on TPU).
+``ops.py`` (auto interpret on CPU, Mosaic on TPU). The differentiable
+entry points — ``fused_cross_entropy_loss``, ``fused_distill_mean``,
+``fused_ce_distill`` — wrap forward+backward in ``jax.custom_vjp`` and are
+what ``core.codistillation`` dispatches to under the ``fused_losses`` flag;
+gradient parity vs the jnp references is tested in tests/test_kernel_grads.py.
+See docs/fused_losses.md for the paper-term-to-kernel mapping.
 """
 from repro.kernels.ops import (  # noqa: F401
     attention,
     auto_interpret,
     cross_entropy_tokens,
     distill_loss_tokens,
+    fused_ce_distill,
+    fused_cross_entropy_loss,
+    fused_distill_mean,
+    fused_losses_default,
 )

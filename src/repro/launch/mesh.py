@@ -17,6 +17,30 @@ from __future__ import annotations
 import jax
 
 
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` where available (jax >= 0.6); on older jax a ``Mesh`` is
+    itself a context manager with the same effect for pjit/shard_map.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """Device-free mesh for sharding-rule unit tests, across jax versions.
+
+    Newer jax: ``AbstractMesh(axis_sizes, axis_names)``; jax <= 0.4 takes a
+    single ``((name, size), ...)`` shape tuple.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

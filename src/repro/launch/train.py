@@ -52,6 +52,10 @@ def main() -> None:
     ap.add_argument("--wd-schedule", action="store_true",
                     help="paper's decayed weight decay")
     ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgdm"])
+    ap.add_argument("--fused-losses", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="custom-VJP Pallas loss kernels (auto: on for TPU; "
+                         "'on' uses interpret mode on CPU — slow)")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=50)
@@ -68,7 +72,9 @@ def main() -> None:
         lr=args.lr, lr_schedule=args.lr_schedule, warmup_steps=args.warmup,
         total_steps=args.steps, weight_decay=args.weight_decay,
         weight_decay_schedule=(5e-4, 1e-5, 0.0) if args.wd_schedule else (),
-        optimizer=args.optimizer, seed=args.seed)
+        optimizer=args.optimizer, seed=args.seed,
+        fused_losses={"auto": None, "on": True, "off": False}[
+            args.fused_losses])
 
     def eval_batches(step):
         if args.mode == "allreduce":

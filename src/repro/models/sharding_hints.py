@@ -54,6 +54,12 @@ def _active() -> bool:
         getattr(_state, "tp_axis", None) is not None
 
 
+def tensor_parallel_active() -> bool:
+    """True while tracing under an activation-sharding context with a tensor
+    -parallel axis (the lm-head/vocab dimension may be sharded)."""
+    return getattr(_state, "tp_axis", None) is not None
+
+
 def hint(x: jax.Array, kind: str) -> jax.Array:
     if not _active():
         return x

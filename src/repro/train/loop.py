@@ -62,7 +62,7 @@ def train_allreduce(model, tc: TrainConfig, batches: Iterator[Dict],
         state = init_train_state(model, jax.random.key(tc.seed), opt_init)
     params0 = jax.tree.map(jnp.array, state.params) if track_param_distance else None
     step_fn = jax.jit(steps_mod.make_allreduce_step(model, tc, trainable))
-    eval_fn = jax.jit(steps_mod.make_eval_step(model))
+    eval_fn = jax.jit(steps_mod.make_eval_step(model, tc))
     hist = History()
     for k in range(tc.total_steps):
         state, metrics = step_fn(state, next(batches))
@@ -113,7 +113,7 @@ def train_codist(model, codist: CodistConfig, tc: TrainConfig,
                                                      trainable))
         step_off = jax.jit(steps_mod.make_codist_step(model, codist, tc, False,
                                                       trainable))
-    eval_fn = jax.jit(steps_mod.make_codist_eval_step(model))
+    eval_fn = jax.jit(steps_mod.make_codist_eval_step(model, tc))
     hist = History()
     comm_events = 0
     for k in range(tc.total_steps):

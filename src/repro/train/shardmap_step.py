@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import CodistConfig, TrainConfig
 from repro.core import codistillation as cd
 from repro.optim import make_optimizer
@@ -63,7 +64,8 @@ def make_codist_shardmap_step(model, codist: CodistConfig, tc: TrainConfig,
                 batch = jax.tree.map(lambda x: x[0], batch_1)
                 logits, aux = model.forward(params, batch, remat=tc.remat)
                 task = cd.cross_entropy(logits, batch["labels"],
-                                        ls_fn(state.step), batch.get("mask"))
+                                        ls_fn(state.step), batch.get("mask"),
+                                        fused=tc.fused_losses)
                 # local compression, explicit cross-pod gather of the wire
                 wire = cd.compress_targets(
                     codist, jax.lax.stop_gradient(logits))
@@ -74,14 +76,15 @@ def make_codist_shardmap_step(model, codist: CodistConfig, tc: TrainConfig,
                 for j in range(n):
                     wire_j = jax.tree.map(lambda x: x[j], wires_all)
                     d = cd.distill_vs_compressed(codist, logits, wire_j,
-                                                 batch.get("mask"))
+                                                 batch.get("mask"),
+                                                 fused=tc.fused_losses)
                     dist = dist + jnp.where(idx == j, 0.0, d)
                 dist = dist / (n - 1)
                 total = task + alpha_fn(state.step) * dist + aux
                 out = jnp.stack([total, task, dist, aux])
                 return out[None]  # (1, 4): pod-sharded metrics row
 
-            per_pod_mapped = jax.shard_map(
+            per_pod_mapped = compat.shard_map(
                 per_pod, mesh=mesh,
                 in_specs=(_lead_spec(stacked, "pod"), _lead_spec(b, "pod")),
                 out_specs=P("pod", None),

@@ -111,7 +111,8 @@ def make_allreduce_step(model, tc: TrainConfig,
         def loss_fn(params, b):
             logits, aux = _task_forward(model, params, b, tc.remat)
             task = cd.cross_entropy(logits, b["labels"],
-                                    ls_fn(state.step), b.get("mask"))
+                                    ls_fn(state.step), b.get("mask"),
+                                    fused=tc.fused_losses)
             metrics = {"loss": task + aux, "task_loss": task, "aux_loss": aux,
                        "accuracy": cd.accuracy(logits, b["labels"],
                                                b.get("mask"))}
@@ -160,11 +161,12 @@ def make_codist_step(model, codist: CodistConfig, tc: TrainConfig,
                 total, metrics = cd.codist_loss(
                     codist, logits_all, b["labels"],
                     alpha_fn(state.step), ls_fn(state.step),
-                    b.get("mask"))
+                    b.get("mask"), fused=tc.fused_losses)
             else:
                 task = jax.vmap(
                     lambda lg, lb, m: cd.cross_entropy(lg, lb,
-                                                       ls_fn(state.step), m)
+                                                       ls_fn(state.step), m,
+                                                       fused=tc.fused_losses)
                 )(logits_all, b["labels"],
                   b.get("mask", jnp.ones(b["labels"].shape, jnp.float32)))
                 total = jnp.mean(task)
@@ -227,7 +229,7 @@ def make_codist_checkpoint_step(model, codist: CodistConfig, tc: TrainConfig,
             total, metrics = cd.codist_loss(
                 codist, logits_all, batch_all["labels"], alpha_fn(state.step),
                 ls_fn(state.step), batch_all.get("mask"),
-                peer_pairwise=peer_pairwise)
+                peer_pairwise=peer_pairwise, fused=tc.fused_losses)
             total = total + jnp.mean(aux_all)
             metrics["aux_loss"] = jnp.mean(aux_all)
             return total, metrics
@@ -278,7 +280,8 @@ def make_codist_pipelined_step(model, codist: CodistConfig, tc: TrainConfig
             logits_all, aux_all = _stacked_forward(model, stacked, batch_all,
                                                    tc.remat)
             task = jax.vmap(
-                lambda lg, lb, m: cd.cross_entropy(lg, lb, ls_fn(state.step), m)
+                lambda lg, lb, m: cd.cross_entropy(lg, lb, ls_fn(state.step),
+                                                   m, fused=tc.fused_losses)
             )(logits_all, batch_all["labels"],
               batch_all.get("mask", jnp.ones(batch_all["labels"].shape,
                                              jnp.float32)))
@@ -288,7 +291,7 @@ def make_codist_pipelined_step(model, codist: CodistConfig, tc: TrainConfig
             _, dmetrics = cd.codist_loss(
                 codist, replay_logits, peer["batch"]["labels"],
                 alpha_fn(state.step), 0.0, peer["batch"].get("mask"),
-                peer_logits_all=peer["logits"])
+                peer_logits_all=peer["logits"], fused=tc.fused_losses)
             dist = dmetrics["distill_loss_per_model"]
             alpha = alpha_fn(state.step) * peer["valid"].astype(jnp.float32)
             total = jnp.mean(task + alpha * dist) + jnp.mean(aux_all)
@@ -321,22 +324,27 @@ def init_peer_state(batch_all: Dict, logits_shape: Tuple[int, ...]) -> Dict:
 # eval
 # ----------------------------------------------------------------------------
 
-def make_eval_step(model) -> Callable:
+def make_eval_step(model, tc: Optional[TrainConfig] = None) -> Callable:
+    fused = tc.fused_losses if tc is not None else None
+
     def eval_step(params: PyTree, batch: Dict) -> Dict:
         logits, _ = _task_forward(model, params, batch, False)
         return {
             "eval_loss": cd.cross_entropy(logits, batch["labels"],
-                                          0.0, batch.get("mask")),
+                                          0.0, batch.get("mask"),
+                                          fused=fused),
             "eval_accuracy": cd.accuracy(logits, batch["labels"],
                                          batch.get("mask")),
         }
     return eval_step
 
 
-def make_codist_eval_step(model) -> Callable:
+def make_codist_eval_step(model, tc: Optional[TrainConfig] = None) -> Callable:
+    fused = tc.fused_losses if tc is not None else None
+
     def eval_step(stacked_params: PyTree, batch_all: Dict) -> Dict:
         logits_all, _ = _stacked_forward(model, stacked_params, batch_all, False)
-        loss = jax.vmap(lambda lg, lb: cd.cross_entropy(lg, lb))(
+        loss = jax.vmap(lambda lg, lb: cd.cross_entropy(lg, lb, fused=fused))(
             logits_all, batch_all["labels"])
         acc = jax.vmap(cd.accuracy)(logits_all, batch_all["labels"])
         return {"eval_loss": jnp.mean(loss), "eval_loss_per_model": loss,

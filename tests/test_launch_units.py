@@ -95,8 +95,8 @@ class TestShardingRules:
     @pytest.fixture(scope="class")
     def mesh(self):
         # AbstractMesh avoids touching real devices
-        from jax.sharding import AbstractMesh
-        return AbstractMesh((16, 16), ("data", "model"))
+        from repro.launch.mesh import abstract_mesh
+        return abstract_mesh((16, 16), ("data", "model"))
 
     def test_attention_head_fallback_replicates(self, mesh):
         from repro.launch.sharding import param_spec
@@ -130,17 +130,17 @@ class TestShardingRules:
         assert spec[0] is None
 
     def test_stacked_codist_axis(self):
-        from jax.sharding import AbstractMesh
+        from repro.launch.mesh import abstract_mesh
         from repro.launch.sharding import param_spec
-        mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+        mesh = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
         spec = param_spec("layers/sub0/ffn/w_up", (2, 24, 1024, 2816), mesh,
                           stacked=True, scanned=True)
         assert spec[0] == "pod" and spec[1] is None
 
     def test_two_d_ffn_decode(self):
-        from jax.sharding import AbstractMesh
+        from repro.launch.mesh import abstract_mesh
         from repro.launch.sharding import param_spec
-        mesh = AbstractMesh((16, 16), ("data", "model"))
+        mesh = abstract_mesh((16, 16), ("data", "model"))
         spec = param_spec("layers/sub0/ffn/w_up", (28, 3584, 18944), mesh,
                           scanned=True, two_d_ffn=True)
         assert spec[2] == ("data", "model")

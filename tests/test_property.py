@@ -1,9 +1,16 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+``hypothesis`` is an optional dev dependency (declared in
+requirements-dev.txt); the module skips cleanly where it isn't installed
+instead of aborting collection.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import CodistConfig, get_reduced
 from repro.core import codistillation as cd

@@ -1,56 +1,80 @@
-"""Step-time microbenchmarks (CPU, tiny model): relative cost of the exchange
-modes and the kernels vs their jnp references. Wall-clock on this container is
-NOT TPU-predictive — roofline terms in the dry-run are — but relative step
-structure (distill on/off, checkpoint n-forwards, pipelined replay) is."""
+"""Step-time microbenchmarks (CPU, tiny model): every exchange strategy
+through the unified ``build_train_step`` engine, plus the kernels vs their
+jnp references. Wall-clock on this container is NOT TPU-predictive —
+roofline terms in the dry-run are — but relative step structure (distill
+on/off, checkpoint n-forwards, pipelined replay, shard_map exchange) is.
+Each strategy row's ``derived`` carries its Section-3 comm accounting:
+``strategy.comm_bytes`` per exchange event."""
 from __future__ import annotations
 
 from typing import Dict, List
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import CodistConfig, TrainConfig
 from repro.data import make_lm_batch
 from repro.optim import make_optimizer
-from repro.train import init_codist_state, stack_batches
-from repro.train import steps as steps_mod
+from repro.train import (AllReduce, CheckpointExchange, PipelinedPredictions,
+                         PredictionExchange, ShardMapCompressed,
+                         build_train_step, stack_batches)
 
 from benchmarks.common import lm_setup, timed
 
 
-def run(quick: bool = False) -> List[Dict]:
-    model, task = lm_setup()
+def _strategy_rows(model, task, quick: bool) -> List[Dict]:
+    """ms/step + comm bytes for every strategy via the unified builder."""
     tc = TrainConfig(lr=1e-3, total_steps=100, optimizer="adamw")
     opt_init, _ = make_optimizer("adamw")
-    state = init_codist_state(model, jax.random.key(0), 2, opt_init,
-                              with_stale=True)
-    batch = stack_batches([make_lm_batch(task, 8, 64, 0, None, seed=0)
-                           for _ in range(2)])
+    n, b, s = 2, 8, 64
+    batch = stack_batches([make_lm_batch(task, b, s, 0, None, seed=0)
+                           for _ in range(n)])
+    single = make_lm_batch(task, b, s, 0, None, seed=0)
+    pred_cfg = CodistConfig(n_models=n)
+    topk_cfg = CodistConfig(n_models=n, compression="topk", topk=16)
+    ckpt_cfg = CodistConfig(n_models=n, mode="checkpoints")
+    pipe_cfg = CodistConfig(n_models=n, pipelined=True)
+    setups = [
+        ("allreduce", AllReduce(), single, "on"),
+        ("prediction", PredictionExchange(pred_cfg), batch, "on"),
+        ("prediction_off", PredictionExchange(pred_cfg), batch, "off"),
+        ("prediction_topk", PredictionExchange(topk_cfg), batch, "on"),
+        ("checkpoint", CheckpointExchange(ckpt_cfg), batch, "on"),
+        ("pipelined", PipelinedPredictions(pipe_cfg), batch, "on"),
+    ]
     rows: List[Dict] = []
-    variants = {
-        "step_codist_distill": jax.jit(steps_mod.make_codist_step(
-            model, CodistConfig(n_models=2), tc, True)),
-        "step_codist_plain": jax.jit(steps_mod.make_codist_step(
-            model, CodistConfig(n_models=2), tc, False)),
-        "step_codist_topk": jax.jit(steps_mod.make_codist_step(
-            model, CodistConfig(n_models=2, compression="topk", topk=16),
-            tc, True)),
-        "step_checkpoint_mode": jax.jit(steps_mod.make_codist_checkpoint_step(
-            model, CodistConfig(n_models=2, mode="checkpoints"), tc)),
-    }
-    base_us = None
-    for name, fn in variants.items():
-        (_, m), us = timed(lambda f=fn: f(state, batch), warmup=1,
-                           iters=2 if quick else 5)
-        if name == "step_codist_plain":
-            base_us = us
-        rows.append({"name": f"throughput/{name}", "us_per_call": us,
-                     "derived": round(float(m["loss"]), 4)})
-    # relative overheads vs the no-distill step
-    if base_us:
-        for r in rows:
-            if r["name"] != "throughput/step_codist_plain":
-                r["derived"] = f"{r['us_per_call'] / base_us:.2f}x_plain"
+    if jax.device_count() >= n:
+        mesh = jax.make_mesh((n,), ("pod",))
+        setups.append(("shardmap", ShardMapCompressed(topk_cfg, mesh), batch,
+                       "on"))
+    else:
+        # no silent skips: the shard_map strategy needs an n-device "pod"
+        # axis (jax is already initialized, so host devices can't be forced
+        # here); record the row with its comm accounting and zero timing
+        st = PredictionExchange(topk_cfg).init_state(
+            model, tc, jax.random.key(0), opt_init, batch)
+        comm = PredictionExchange(topk_cfg).comm_bytes(model, st, batch)
+        rows.append({"name": "throughput/strategy_shardmap",
+                     "us_per_call": 0.0,
+                     "derived": f"skipped_needs_{n}_devices,"
+                                f"comm_bytes={comm:.0f}"})
+    for name, strategy, bt, variant in setups:
+        # build_train_step falls back to strategy.codist for the schedules
+        bundle = build_train_step(model, tc, None, strategy)
+        state = strategy.init_state(model, tc, jax.random.key(0), opt_init,
+                                    bt)
+        comm = strategy.comm_bytes(model, state, bt)
+        fn = bundle.jitted(variant)
+        _, us = timed(lambda f=fn, st=state, bb=bt: f(st, bb), warmup=1,
+                      iters=2 if quick else 5)
+        rows.append({"name": f"throughput/strategy_{name}",
+                     "us_per_call": us,
+                     "derived": f"comm_bytes={comm:.0f}"})
+    return rows
+
+
+def run(quick: bool = False) -> List[Dict]:
+    model, task = lm_setup()
+    rows = _strategy_rows(model, task, quick)
 
     # kernels vs jnp references (interpret mode: correctness-path timing only)
     from repro.core import codistillation as cd

@@ -41,6 +41,9 @@ state_c, hist_c = train_codist(model, codist, tc, batches, log_every=10)
 for r in hist_c.records:
     print(f"  step {r['step']:3d}  task {r['task_loss']:.4f}  "
           f"distill {r['distill_loss']:.5f}")
+print(f"  observed exchange traffic: {hist_c.records[-1]['comm_events']:.0f} "
+      f"events, {hist_c.records[-1]['comm_bytes']:.3e} bytes "
+      f"(strategy.comm_bytes accounting)")
 
 print("== all_reduce baseline (one model, batch 2B) ==")
 

@@ -25,13 +25,4 @@ from repro.core.comm_model import (  # noqa: F401
     prediction_bits_classifier,
     prediction_bits_lm,
 )
-from repro.core.exchange import (  # noqa: F401
-    CheckpointExchangeState,
-    PipelinedState,
-    StepPlan,
-    init_checkpoint_exchange,
-    init_pipelined,
-    maybe_exchange_checkpoints,
-    pipelined_targets,
-    update_pipelined,
-)
+from repro.core.exchange import StepPlan  # noqa: F401

@@ -1,98 +1,24 @@
-"""Exchange strategies for codistillation (Section 3 implementation options).
+"""Host-side step scheduling for the exchange mechanisms.
 
-Prediction exchange (coordinated sampling) is handled directly inside the step
-function via the stacked-logits codist loss. This module implements the pieces
-that carry *state across steps*:
+The exchange mechanisms themselves (prediction / checkpoint / pipelined /
+shard_map-compressed) are ``ExchangeStrategy`` classes in
+``repro.train.engine``; each strategy owns its schedule via
+``strategy.plan(step)``. ``StepPlan`` is the value those plans return: a
+static host-side decision of which compiled variant to run and whether
+communication happens this step (Section 3's "only periodically communicate
+predictions, and omit the distillation term otherwise").
 
-  * CheckpointExchange — every T steps each group publishes its parameters;
-    between exchanges every group trains against the (stale) replica set and
-    pays n-1 extra forward passes per step (Anil et al.'s variant).
-  * PipelinedPredictions — beyond-paper: distill against the *previous*
-    exchange step's peer logits, removing the per-step sync point (the paper
-    argues predictions drift slowly — Section 3 — so 1-step staleness is benign;
-    we make that an explicit first-class scheduling mode and validate it).
-
-Both are pure-functional: state in, state out, usable inside pjit.
+``StepPlan.for_step`` is the config-driven convenience used by strategies and
+tests; the stale-replica / peer-logits state that used to live here is now
+carried on ``CodistState`` (``train.state``) and updated by the strategies'
+``post_update`` / ``host_exchange`` hooks.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, NamedTuple, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
 
 from repro.configs.base import CodistConfig
 
-PyTree = Any
-
-
-class CheckpointExchangeState(NamedTuple):
-    """Stale replica buffer: stacked params of ALL n models as of the last
-    exchange; every group holds the full set (replicated over pod)."""
-    stale_params: PyTree
-    last_exchange_step: jax.Array  # int32 scalar
-
-
-def init_checkpoint_exchange(stacked_params: PyTree) -> CheckpointExchangeState:
-    return CheckpointExchangeState(
-        stale_params=jax.tree.map(jnp.array, stacked_params),
-        last_exchange_step=jnp.zeros((), jnp.int32),
-    )
-
-
-def maybe_exchange_checkpoints(cfg: CodistConfig,
-                               state: CheckpointExchangeState,
-                               stacked_params: PyTree,
-                               step: jax.Array) -> CheckpointExchangeState:
-    """Publish fresh params every ``cfg.period`` steps (lax.cond so both sides
-    lower; on real hardware the true branch is the cross-pod all-gather)."""
-    do = (step % cfg.period) == 0
-
-    def fresh(_):
-        return CheckpointExchangeState(
-            stale_params=jax.tree.map(lambda x: x, stacked_params),
-            last_exchange_step=jnp.asarray(step, jnp.int32),
-        )
-
-    def keep(_):
-        return state
-
-    return jax.lax.cond(do, fresh, keep, operand=None)
-
-
-class PipelinedState(NamedTuple):
-    """Previous-step stacked logits used as distillation targets."""
-    peer_logits: jax.Array   # (n, B, S, V) — or compressed wire pytree
-    valid: jax.Array         # bool scalar: False until first exchange done
-
-
-def init_pipelined(n: int, logits_shape: Tuple[int, ...],
-                   dtype=jnp.float32) -> PipelinedState:
-    return PipelinedState(
-        peer_logits=jnp.zeros((n, *logits_shape), dtype),
-        valid=jnp.zeros((), jnp.bool_),
-    )
-
-
-def pipelined_targets(state: PipelinedState,
-                      live_logits: jax.Array) -> jax.Array:
-    """Targets = previous step's logits when available, else live (first step)."""
-    return jnp.where(state.valid, state.peer_logits,
-                     jax.lax.stop_gradient(live_logits))
-
-
-def update_pipelined(state: PipelinedState,
-                     live_logits: jax.Array) -> PipelinedState:
-    return PipelinedState(
-        peer_logits=jax.lax.stop_gradient(live_logits).astype(state.peer_logits.dtype),
-        valid=jnp.ones((), jnp.bool_),
-    )
-
-
-# ----------------------------------------------------------------------------
-# step scheduling: which steps carry a distillation term / an exchange
-# ----------------------------------------------------------------------------
 
 @dataclass(frozen=True)
 class StepPlan:

@@ -4,34 +4,62 @@
         --mode codist --codist-n 2 --steps 200 --batch 8 --seq 128 \
         --reduced --out results/train_run
 
+``--mode`` maps one-to-one onto the engine's exchange strategies:
+
+    allreduce         AllReduce            gradient sync baseline
+    codist            PredictionExchange   Algorithm 1 logits exchange
+    codist-ckpt       CheckpointExchange   Anil et al. stale replicas
+    codist-pipelined  PipelinedPredictions previous-step targets
+    codist-shardmap   ShardMapCompressed   explicit compressed pod exchange
+
 On this container it runs REDUCED configs on CPU with synthetic data; on a
 real cluster the same entrypoint takes the full config (drop ``--reduced``)
-and the production mesh (``--mesh single|multi``), where pjit shards the step
-exactly as the dry-run proved.
+and the production mesh, where pjit shards the step exactly as the dry-run
+proved. ``codist-shardmap`` shard_maps over a "pod" mesh axis of size
+``--codist-n``; on CPU that many host devices are forced (via XLA_FLAGS,
+before jax initializes — hence the deferred imports below).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import sys
 import time
-from dataclasses import replace
 
-import jax
+MODES = ["codist", "codist-ckpt", "codist-pipelined", "codist-shardmap",
+         "allreduce"]
 
-from repro.configs import (CodistConfig, TrainConfig, get_config, get_reduced,
-                           list_archs)
-from repro.data import MarkovLM, make_lm_batch
-from repro.models import build_model
-from repro.train import stack_batches, train_allreduce, train_codist
+
+def _ensure_pod_devices(argv) -> None:
+    """codist-shardmap needs a "pod" mesh axis of size n_models; on hosts
+    without that many devices, force host devices BEFORE jax initializes."""
+    pre = argparse.ArgumentParser(add_help=False)
+    pre.add_argument("--mode", default="codist")
+    pre.add_argument("--codist-n", type=int, default=2)
+    args, _ = pre.parse_known_args(argv)
+    flags = os.environ.get("XLA_FLAGS", "")
+    if (args.mode == "codist-shardmap"
+            and "xla_force_host_platform_device_count" not in flags):
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={args.codist_n}"
+        ).strip()
 
 
 def main() -> None:
+    _ensure_pod_devices(sys.argv[1:])
+    import jax
+
+    from repro.configs import (CodistConfig, TrainConfig, get_config,
+                               get_reduced, list_archs)
+    from repro.data import MarkovLM, make_lm_batch
+    from repro.models import build_model
+    from repro.train import (ShardMapCompressed, stack_batches,
+                             train_allreduce, train_codist)
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b", choices=list_archs())
-    ap.add_argument("--mode", default="codist",
-                    choices=["codist", "codist-ckpt", "codist-pipelined",
-                             "allreduce"])
+    ap.add_argument("--mode", default="codist", choices=MODES)
     ap.add_argument("--codist-n", type=int, default=2)
     ap.add_argument("--period", type=int, default=1)
     ap.add_argument("--alpha", type=float, default=1.0)
@@ -106,6 +134,14 @@ def main() -> None:
             alpha_growth=args.alpha_growth, distill_loss=args.distill_loss,
             compression=args.compression, topk=args.topk,
             steps_per_epoch=max(1, args.steps // 10))
+        strategy = None
+        if args.mode == "codist-shardmap":
+            if jax.device_count() < args.codist_n:
+                raise SystemExit(
+                    f"codist-shardmap needs >= {args.codist_n} devices for "
+                    f"the 'pod' axis; have {jax.device_count()}")
+            mesh = jax.make_mesh((args.codist_n,), ("pod",))
+            strategy = ShardMapCompressed(codist, mesh)
         coordinated = codist.mode == "predictions"
 
         def batches(step):
@@ -117,14 +153,16 @@ def main() -> None:
         state, hist = train_codist(model, codist, tc, batches,
                                    eval_batches=eval_batches,
                                    eval_every=args.eval_every,
-                                   log_every=args.log_every)
+                                   log_every=args.log_every,
+                                   strategy=strategy)
     dt = time.time() - t0
 
     for rec in hist.records:
         msg = " ".join(f"{k}={v:.4f}" if isinstance(v, float) else f"{k}={v}"
                        for k, v in rec.items()
                        if k in ("step", "task_loss", "distill_loss",
-                                "eval_loss", "lr", "wd", "alpha"))
+                                "eval_loss", "lr", "wd", "alpha",
+                                "comm_bytes"))
         print(msg, flush=True)
     print(f"done: {args.steps} steps in {dt:.1f}s "
           f"({dt / args.steps * 1e3:.0f} ms/step)")

@@ -1,6 +1,23 @@
+from repro.train.engine import (  # noqa: F401
+    AllReduce,
+    CheckpointExchange,
+    ExchangeStrategy,
+    PipelinedPredictions,
+    PredictionExchange,
+    STRATEGIES,
+    ShardMapCompressed,
+    StepBundle,
+    build_train_step,
+    make_codist_eval_step,
+    make_eval_step,
+    make_schedules,
+    refresh_stale,
+    resolve_strategy,
+)
 from repro.train.loop import (  # noqa: F401
     History,
     stack_batches,
+    train,
     train_allreduce,
     train_codist,
 )
@@ -8,15 +25,12 @@ from repro.train.state import (  # noqa: F401
     CodistState,
     TrainState,
     init_codist_state,
+    init_peer_state,
     init_train_state,
 )
-from repro.train.steps import (  # noqa: F401
+from repro.train.steps import (  # noqa: F401  (deprecated aliases)
     make_allreduce_step,
     make_codist_checkpoint_step,
-    make_codist_eval_step,
     make_codist_pipelined_step,
     make_codist_step,
-    make_eval_step,
-    make_schedules,
-    refresh_stale,
 )

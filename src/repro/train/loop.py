@@ -1,9 +1,14 @@
-"""Host training loops: metric logging, StepPlan-driven variant dispatch,
-periodic checkpoint exchange, eval, and the Fig.-7 parameter-distance probe.
+"""Host training loop: metric logging, plan-driven variant dispatch, comm
+event/byte accounting, eval, and the Fig.-7 parameter-distance probe.
+
+The loop is strategy-agnostic: ``strategy.plan(k)`` picks the compiled
+variant and decides when an exchange happens; the strategy's
+``host_exchange`` performs any host-side communication (the checkpoint-mode
+stale refresh); ``strategy.comm_bytes`` prices each exchange event for the
+Section-3 accounting. No mechanism-specific branching lives here.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterator, List, Optional
 
@@ -12,9 +17,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import CodistConfig, TrainConfig
 from repro.core.codistillation import param_distance_from
-from repro.core.exchange import StepPlan
-from repro.train import steps as steps_mod
-from repro.train.state import CodistState, TrainState
+from repro.train.engine import (ExchangeStrategy, AllReduce, build_train_step,
+                                resolve_strategy)
 
 PyTree = Any
 
@@ -48,26 +52,40 @@ class History:
         return [r[key] for r in self.records if key in r]
 
 
-def train_allreduce(model, tc: TrainConfig, batches: Iterator[Dict],
-                    eval_batches: Optional[Callable[[int], Dict]] = None,
-                    eval_every: int = 0, log_every: int = 10,
-                    state: Optional[TrainState] = None,
-                    trainable: Optional[PyTree] = None,
-                    track_param_distance: bool = False) -> tuple:
+def train(model, tc: TrainConfig, batches: Callable[[int], Dict],
+          strategy: ExchangeStrategy, codist: Optional[CodistConfig] = None,
+          eval_batches: Optional[Callable[[int], Dict]] = None,
+          eval_every: int = 0, log_every: int = 10,
+          state=None, trainable: Optional[PyTree] = None,
+          track_param_distance: bool = False) -> tuple:
+    """Generic strategy-driven loop. ``batches(step)`` returns the batch for
+    that step (stacked with a leading n axis for codist strategies — it owns
+    coordinated vs. independent sampling)."""
     from repro.optim import make_optimizer
-    from repro.train.state import init_train_state
     opt_init, _ = make_optimizer(tc.optimizer, momentum=tc.momentum,
-                                 b1=tc.adam_b1, b2=tc.adam_b2)
+                                 b1=tc.adam_b1, b2=tc.adam_b2,
+                                 dtype=tc.opt_dtype)
+    example = batches(0)
     if state is None:
-        state = init_train_state(model, jax.random.key(tc.seed), opt_init)
-    params0 = jax.tree.map(jnp.array, state.params) if track_param_distance else None
-    step_fn = jax.jit(steps_mod.make_allreduce_step(model, tc, trainable))
-    eval_fn = jax.jit(steps_mod.make_eval_step(model, tc))
+        state = strategy.init_state(model, tc, jax.random.key(tc.seed),
+                                    opt_init, example)
+    else:
+        state = strategy.ensure_state(state, model, tc, example)
+    bundle = build_train_step(model, tc, codist, strategy, trainable)
+    eval_fn = jax.jit(bundle.eval_fn)
+    params0 = (jax.tree.map(jnp.array, state.params)
+               if track_param_distance else None)
+    bytes_per_event = strategy.comm_bytes(model, state, example, tc.microbatch)
     hist = History()
+    comm_events = 0
     for k in range(tc.total_steps):
-        state, metrics = step_fn(state, next(batches))
+        batch = example if k == 0 else batches(k)
+        state, metrics, plan = bundle.apply(state, batch, k)
+        if plan.exchange:
+            comm_events += 1
         if k % log_every == 0 or k == tc.total_steps - 1:
-            extra = {}
+            extra = {"comm_events": comm_events,
+                     "comm_bytes": comm_events * bytes_per_event}
             if track_param_distance:
                 extra["param_distance"] = float(
                     param_distance_from(state.params, params0))
@@ -76,83 +94,34 @@ def train_allreduce(model, tc: TrainConfig, batches: Iterator[Dict],
                 metrics = {**metrics, **eval_fn(state.params, eval_batches(k))}
             hist.log(k, metrics, **extra)
     return state, hist
+
+
+def train_allreduce(model, tc: TrainConfig, batches: Iterator[Dict],
+                    eval_batches: Optional[Callable[[int], Dict]] = None,
+                    eval_every: int = 0, log_every: int = 10,
+                    state=None, trainable: Optional[PyTree] = None,
+                    track_param_distance: bool = False) -> tuple:
+    it = iter(batches)
+    return train(model, tc, lambda k: next(it), AllReduce(),
+                 eval_batches=eval_batches, eval_every=eval_every,
+                 log_every=log_every, state=state, trainable=trainable,
+                 track_param_distance=track_param_distance)
 
 
 def train_codist(model, codist: CodistConfig, tc: TrainConfig,
                  batches: Callable[[int], Dict],
                  eval_batches: Optional[Callable[[int], Dict]] = None,
                  eval_every: int = 0, log_every: int = 10,
-                 state: Optional[CodistState] = None,
-                 trainable: Optional[PyTree] = None,
-                 track_param_distance: bool = False) -> tuple:
-    """Generic codistillation loop.
-
-    ``batches(step)`` returns the stacked batch dict (leading n axis) for that
-    step — it owns coordinated vs. independent sampling.
-    """
-    from repro.optim import make_optimizer
-    from repro.train.state import init_codist_state
-    opt_init, _ = make_optimizer(tc.optimizer, momentum=tc.momentum,
-                                 b1=tc.adam_b1, b2=tc.adam_b2)
-    ckpt_mode = codist.mode == "checkpoints"
-    if state is None:
-        state = init_codist_state(model, jax.random.key(tc.seed),
-                                  codist.n_models, opt_init,
-                                  with_stale=ckpt_mode)
-    params0 = jax.tree.map(jnp.array, state.params) if track_param_distance else None
-
-    if codist.pipelined:
-        step_on = jax.jit(steps_mod.make_codist_pipelined_step(model, codist, tc))
-        step_off = None
-    elif ckpt_mode:
-        step_on = jax.jit(steps_mod.make_codist_checkpoint_step(
-            model, codist, tc, trainable))
-        step_off = None
-    else:
-        step_on = jax.jit(steps_mod.make_codist_step(model, codist, tc, True,
-                                                     trainable))
-        step_off = jax.jit(steps_mod.make_codist_step(model, codist, tc, False,
-                                                      trainable))
-    eval_fn = jax.jit(steps_mod.make_codist_eval_step(model, tc))
-    hist = History()
-    comm_events = 0
-    for k in range(tc.total_steps):
-        batch_all = batches(k)
-        plan = StepPlan.for_step(codist, k)
-        if codist.pipelined:
-            if state.peer is None:
-                n = codist.n_models
-                # peer logits shape: infer from a dry forward on model 0
-                logits_shape = jax.eval_shape(
-                    lambda p, b: model.forward(
-                        jax.tree.map(lambda x: x[0], p),
-                        jax.tree.map(lambda x: x[0], b))[0],
-                    state.params, batch_all).shape
-                state = state._replace(peer=steps_mod.init_peer_state(
-                    batch_all, (n, *logits_shape)))
-            state, metrics = step_on(state, batch_all)
-            comm_events += 1
-        elif ckpt_mode:
-            if plan.exchange:
-                state = steps_mod.refresh_stale(state)
-                comm_events += 1
-            state, metrics = step_on(state, batch_all)
-        else:
-            if plan.distill:
-                state, metrics = step_on(state, batch_all)
-                comm_events += 1
-            else:
-                state, metrics = step_off(state, batch_all)
-        if k % log_every == 0 or k == tc.total_steps - 1:
-            extra = {"comm_events": comm_events}
-            if track_param_distance:
-                extra["param_distance"] = float(
-                    param_distance_from(state.params, params0))
-            if eval_every and eval_batches is not None and (
-                    k % eval_every == 0 or k == tc.total_steps - 1):
-                metrics = {**metrics, **eval_fn(state.params, eval_batches(k))}
-            hist.log(k, metrics, **extra)
-    return state, hist
+                 state=None, trainable: Optional[PyTree] = None,
+                 track_param_distance: bool = False,
+                 strategy: Optional[ExchangeStrategy] = None) -> tuple:
+    """Codistillation loop; the mechanism comes from ``strategy`` (explicit
+    instance, e.g. ``ShardMapCompressed``) or ``resolve_strategy(codist)``."""
+    strategy = strategy if strategy is not None else resolve_strategy(codist)
+    return train(model, tc, batches, strategy, codist=codist,
+                 eval_batches=eval_batches, eval_every=eval_every,
+                 log_every=log_every, state=state, trainable=trainable,
+                 track_param_distance=track_param_distance)
 
 
 def stack_batches(batch_list: List[Dict]) -> Dict:

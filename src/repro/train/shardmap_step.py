@@ -1,117 +1,36 @@
-"""Explicit-collective codistillation step (shard_map over the pod axis).
+"""DEPRECATED — the explicit-collective codistillation step is now the
+``ShardMapCompressed`` strategy in ``repro.train.engine``.
 
-The pure-pjit codist step lets XLA place the cross-pod exchange — fine for
-raw logits, but compiler-chosen placement defeats producer-side COMPRESSION
-(XLA may move the raw logits and compress afterwards). This step pins the
-schedule by construction:
-
-  * manual over ``"pod"``: each pod computes its model's forward, task loss
-    and the COMPRESSED wire locally (``"data"``/``"model"`` stay automatic, so
-    FSDP/TP inside the pod is unchanged);
-  * ``jax.lax.all_gather(wire, "pod")`` is the ONLY cross-pod communication —
-    by construction the links carry exactly the compressed representation
-    (top-k values+indices / bf16 / a token subsample), fulfilling the paper's
-    Section-3 accounting on TPU topology;
-  * ``stop_gradient`` on the received wire keeps the backward pass pod-local.
-
-This is the beyond-paper deliverable: the paper exchanges full fp32
-predictions; LM vocabularies make that as heavy as gradient sync, and this
-step restores the 100-1000x win the paper reported for small prediction
-vectors.
+Rationale (unchanged): the pure-pjit codist step lets XLA place the cross-pod
+exchange — fine for raw logits, but compiler-chosen placement defeats
+producer-side COMPRESSION (XLA may move the raw logits and compress
+afterwards). ``ShardMapCompressed`` pins the schedule by construction: manual
+``shard_map`` over ``"pod"``, each pod computes its model's forward, task
+loss and the compressed wire locally, and ``jax.lax.all_gather(wire, "pod")``
+is the ONLY cross-pod communication — the links carry exactly the compressed
+representation (top-k values+indices / bf16 / a token subsample), fulfilling
+the paper's Section-3 accounting on TPU topology. It is CLI-reachable as
+``--mode codist-shardmap`` on ``repro.launch.train``.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from repro import compat
 from repro.configs.base import CodistConfig, TrainConfig
-from repro.core import codistillation as cd
-from repro.optim import make_optimizer
-from repro.train.state import CodistState
-from repro.train.steps import make_schedules, _grads_with_metrics
+from repro.train.engine import ShardMapCompressed, build_train_step
 
 PyTree = Any
 
 
-def _lead_spec(tree: PyTree, axis: str) -> PyTree:
-    return jax.tree.map(
-        lambda x: P(*([axis] + [None] * (x.ndim - 1))), tree)
-
-
 def make_codist_shardmap_step(model, codist: CodistConfig, tc: TrainConfig,
-                              mesh) -> Callable:
-    """Prediction-exchange codist step with an explicit compressed exchange.
+                              mesh, trainable: Optional[PyTree] = None
+                              ) -> Callable:
+    """DEPRECATED: ``build_train_step`` with ``ShardMapCompressed``.
 
-    State/batch layouts are identical to ``make_codist_step`` (stacked leading
-    n axis over "pod"), so shardings and the host loop are unchanged.
+    State/batch layouts are identical to the prediction-exchange step
+    (stacked leading n axis over "pod"), so shardings and the host loop are
+    unchanged.
     """
-    lr_fn, wd_fn, ls_fn, alpha_fn = make_schedules(tc, codist)
-    _, opt_update = make_optimizer(tc.optimizer, momentum=tc.momentum,
-                                   b1=tc.adam_b1, b2=tc.adam_b2,
-                                   dtype=tc.opt_dtype)
-    n = codist.n_models
-    auto_axes = frozenset(a for a in mesh.axis_names if a != "pod")
-
-    def step(state: CodistState, batch_all: Dict) -> Tuple[CodistState, Dict]:
-        def loss_fn(stacked, b):
-            def per_pod(params_1, batch_1):
-                params = jax.tree.map(lambda x: x[0], params_1)
-                batch = jax.tree.map(lambda x: x[0], batch_1)
-                logits, aux = model.forward(params, batch, remat=tc.remat)
-                task = cd.cross_entropy(logits, batch["labels"],
-                                        ls_fn(state.step), batch.get("mask"),
-                                        fused=tc.fused_losses)
-                # local compression, explicit cross-pod gather of the wire
-                wire = cd.compress_targets(
-                    codist, jax.lax.stop_gradient(logits))
-                wires_all = jax.tree.map(
-                    lambda x: jax.lax.all_gather(x, "pod"), wire)
-                idx = jax.lax.axis_index("pod")
-                dist = jnp.zeros((), jnp.float32)
-                for j in range(n):
-                    wire_j = jax.tree.map(lambda x: x[j], wires_all)
-                    d = cd.distill_vs_compressed(codist, logits, wire_j,
-                                                 batch.get("mask"),
-                                                 fused=tc.fused_losses)
-                    dist = dist + jnp.where(idx == j, 0.0, d)
-                dist = dist / (n - 1)
-                total = task + alpha_fn(state.step) * dist + aux
-                out = jnp.stack([total, task, dist, aux])
-                return out[None]  # (1, 4): pod-sharded metrics row
-
-            per_pod_mapped = compat.shard_map(
-                per_pod, mesh=mesh,
-                in_specs=(_lead_spec(stacked, "pod"), _lead_spec(b, "pod")),
-                out_specs=P("pod", None),
-                check_vma=False,
-                axis_names={"pod"},
-            )
-            rows = per_pod_mapped(stacked, b)        # (n, 4)
-            total = jnp.mean(rows[:, 0])
-            metrics = {"loss": total,
-                       "task_loss": jnp.mean(rows[:, 1]),
-                       "distill_loss": jnp.mean(rows[:, 2]),
-                       "aux_loss": jnp.mean(rows[:, 3]),
-                       "task_loss_per_model": rows[:, 1],
-                       "distill_loss_per_model": rows[:, 2],
-                       "alpha": alpha_fn(state.step)}
-            return total, metrics
-
-        mb_batch = batch_all
-        if tc.microbatch > 1:
-            mb_batch = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batch_all)
-        grads, metrics = _grads_with_metrics(loss_fn, state.params, mb_batch,
-                                             tc.microbatch,
-                                             jnp.dtype(tc.accum_dtype))
-        params, opt = opt_update(state.params, grads, state.opt,
-                                 lr_fn(state.step), wd_fn(state.step))
-        metrics.update(lr=lr_fn(state.step), wd=wd_fn(state.step))
-        return CodistState(params, opt, state.step + 1, state.stale,
-                           state.peer), metrics
-
-    return step
+    return build_train_step(model, tc, codist,
+                            ShardMapCompressed(codist, mesh),
+                            trainable).variants["on"]

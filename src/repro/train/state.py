@@ -1,7 +1,7 @@
 """Train states (single-model and stacked codistillation)."""
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,3 +44,11 @@ def init_codist_state(model, key: jax.Array, n: int, opt_init,
     opt = opt_init(params)
     stale = jax.tree.map(jnp.array, params) if with_stale else None
     return CodistState(params, opt, jnp.zeros((), jnp.int32), stale, None)
+
+
+def init_peer_state(batch_all: Dict, logits_shape: Tuple[int, ...]) -> Dict:
+    """Pipelined-prediction peer buffer: previous batch + logits, invalid
+    until the first exchange (``valid`` gates the distillation weight)."""
+    return {"batch": jax.tree.map(jnp.zeros_like, batch_all),
+            "logits": jnp.zeros(logits_shape, jnp.float32),
+            "valid": jnp.zeros((), jnp.bool_)}

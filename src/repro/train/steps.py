@@ -1,352 +1,71 @@
-"""Step functions: all_reduce baseline, codistillation (prediction /
-checkpoint / pipelined), and eval — all pure and pjit-compatible.
+"""DEPRECATED step factories — thin aliases over ``repro.train.engine``.
 
-All schedules (LR, weight decay, label smoothing, alpha) are evaluated
-*inside* the step from ``state.step`` so one compiled step serves the whole
-run. Variants with/without the distillation term are separate compiled
-functions selected by the host loop via ``StepPlan`` (Section 3's "only
-periodically communicate predictions, and omit the distillation term
-otherwise").
+The per-mechanism factories that used to live here (each re-implementing the
+schedule/optimizer/microbatch plumbing) are now single ``build_train_step``
+invocations with the matching ``ExchangeStrategy``. New code should use the
+engine directly:
 
-The stacked-model representation makes the optimizer trivially per-model:
-SGD/Adam are elementwise pytree transforms, so applying them to stacked
-params IS n independent optimizer updates.
+    from repro.train.engine import build_train_step, resolve_strategy
+
+These aliases keep the historical call signatures working for external
+callers, the distributed tests, and the benchmark suite. Shared helpers
+(``make_schedules``, ``_grads_with_metrics``, the eval factories,
+``refresh_stale``) are re-exported from the engine, which is their home now.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs.base import CodistConfig, TrainConfig
-from repro.core import codistillation as cd
-from repro.core import schedules as sched
-from repro.optim import make_optimizer
-from repro.train.state import CodistState, TrainState
+from repro.train.engine import (  # noqa: F401  (re-exported shared helpers)
+    AllReduce,
+    CheckpointExchange,
+    PipelinedPredictions,
+    PredictionExchange,
+    _grads_metrics_aux,
+    _grads_with_metrics,
+    _stacked_forward,
+    _task_forward,
+    build_train_step,
+    make_codist_eval_step,
+    make_eval_step,
+    make_schedules,
+    refresh_stale,
+)
+from repro.train.state import init_peer_state  # noqa: F401 (moved to state)
 
 PyTree = Any
 
 
-# ----------------------------------------------------------------------------
-# schedule bundles
-# ----------------------------------------------------------------------------
-
-def make_schedules(tc: TrainConfig, codist: Optional[CodistConfig] = None):
-    lr_fn = sched.make_lr_fn(tc.lr_schedule, tc.lr, tc.total_steps,
-                             tc.warmup_steps, tc.step_milestones, tc.step_decay)
-    if tc.weight_decay_schedule:
-        values = tuple(tc.weight_decay_schedule)
-        miles = tc.step_milestones[: len(values) - 1]
-        wd_fn = lambda s: sched.scheduled_weight_decay(s, tc.total_steps,
-                                                       values, miles)
-    else:
-        wd_fn = lambda s: sched.constant_weight_decay(s, tc.weight_decay)
-    if tc.label_smoothing_decay:
-        ls_fn = lambda s: sched.decayed_label_smoothing(s, tc.total_steps,
-                                                        tc.label_smoothing)
-    else:
-        ls_fn = lambda s: jnp.asarray(tc.label_smoothing, jnp.float32)
-    if codist is not None:
-        alpha_fn = lambda s: sched.alpha_schedule(
-            s, codist.alpha0, codist.alpha_growth, codist.steps_per_epoch,
-            codist.burn_in_steps)
-    else:
-        alpha_fn = lambda s: jnp.zeros((), jnp.float32)
-    return lr_fn, wd_fn, ls_fn, alpha_fn
-
-
-def _task_forward(model, params: PyTree, batch: Dict, remat: bool):
-    """Unified forward over LM / enc-dec / conv models."""
-    if hasattr(model.cfg, "kind"):  # ConvConfig
-        return model.forward(params, batch)
-    return model.forward(params, batch, remat=remat)
-
-
-def _grads_with_metrics(loss_fn, params: PyTree, batch: Dict, k: int,
-                        accum_dtype=jnp.float32):
-    """Gradients of ``loss_fn(params, batch) -> (loss, metrics)``.
-
-    k>1 enables microbatched gradient accumulation: every batch leaf carries a
-    leading (k, B/k, ...) axis and a lax.scan accumulates fp32 grads — the
-    production memory lever for the biggest configs (per-layer activations
-    saved for backward scale with B/k, not B).
-    """
-    if k <= 1:
-        (_, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, batch)
-        return grads, metrics
-
-    m_shape = jax.eval_shape(
-        lambda p, b: loss_fn(p, b)[1], params,
-        jax.tree.map(lambda x: x[0], batch))
-    m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m_shape)
-    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
-
-    def body(carry, mb):
-        g_acc, m_acc = carry
-        (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
-        g_acc = jax.tree.map(lambda a, gg: a + gg.astype(accum_dtype) / k,
-                             g_acc, g)
-        m_acc = jax.tree.map(lambda a, mm: a + mm / k, m_acc, m)
-        return (g_acc, m_acc), None
-
-    (grads, metrics), _ = jax.lax.scan(body, (g0, m0), batch)
-    return grads, metrics
-
-
-# ----------------------------------------------------------------------------
-# all_reduce baseline (standard data-parallel; gradient sync crosses pods)
-# ----------------------------------------------------------------------------
-
 def make_allreduce_step(model, tc: TrainConfig,
                         trainable: Optional[PyTree] = None) -> Callable:
-    lr_fn, wd_fn, ls_fn, _ = make_schedules(tc)
-    _, opt_update = make_optimizer(tc.optimizer, momentum=tc.momentum,
-                                   b1=tc.adam_b1, b2=tc.adam_b2,
-                                   dtype=tc.opt_dtype)
-
-    def step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
-        def loss_fn(params, b):
-            logits, aux = _task_forward(model, params, b, tc.remat)
-            task = cd.cross_entropy(logits, b["labels"],
-                                    ls_fn(state.step), b.get("mask"),
-                                    fused=tc.fused_losses)
-            metrics = {"loss": task + aux, "task_loss": task, "aux_loss": aux,
-                       "accuracy": cd.accuracy(logits, b["labels"],
-                                               b.get("mask"))}
-            return task + aux, metrics
-
-        grads, metrics = _grads_with_metrics(loss_fn, state.params, batch,
-                                             tc.microbatch,
-                                             jnp.dtype(tc.accum_dtype))
-        params, opt = opt_update(state.params, grads, state.opt,
-                                 lr_fn(state.step), wd_fn(state.step),
-                                 trainable)
-        metrics.update(lr=lr_fn(state.step), wd=wd_fn(state.step))
-        return TrainState(params, opt, state.step + 1), metrics
-
-    return step
-
-
-# ----------------------------------------------------------------------------
-# codistillation steps
-# ----------------------------------------------------------------------------
-
-def _stacked_forward(model, stacked_params: PyTree, batch_all: Dict,
-                     remat: bool):
-    """vmap over the model axis: batch_all arrays carry a leading n axis."""
-    def one(params, batch):
-        return _task_forward(model, params, batch, remat)
-    return jax.vmap(one)(stacked_params, batch_all)
+    """DEPRECATED: ``build_train_step(model, tc, None, AllReduce())``."""
+    return build_train_step(model, tc, None, AllReduce(),
+                            trainable).variants["on"]
 
 
 def make_codist_step(model, codist: CodistConfig, tc: TrainConfig,
                      distill: bool, trainable: Optional[PyTree] = None
                      ) -> Callable:
-    """Prediction-exchange codistillation step (Algorithm 1, coordinated
-    sampling). ``distill=False`` compiles the off-step variant that omits the
-    distillation term (and hence the cross-pod logits collective entirely)."""
-    lr_fn, wd_fn, ls_fn, alpha_fn = make_schedules(tc, codist)
-    _, opt_update = make_optimizer(tc.optimizer, momentum=tc.momentum,
-                                   b1=tc.adam_b1, b2=tc.adam_b2,
-                                   dtype=tc.opt_dtype)
-
-    def step(state: CodistState, batch_all: Dict) -> Tuple[CodistState, Dict]:
-        def loss_fn(stacked, b):
-            logits_all, aux_all = _stacked_forward(model, stacked, b,
-                                                   tc.remat)
-            if distill:
-                total, metrics = cd.codist_loss(
-                    codist, logits_all, b["labels"],
-                    alpha_fn(state.step), ls_fn(state.step),
-                    b.get("mask"), fused=tc.fused_losses)
-            else:
-                task = jax.vmap(
-                    lambda lg, lb, m: cd.cross_entropy(lg, lb,
-                                                       ls_fn(state.step), m,
-                                                       fused=tc.fused_losses)
-                )(logits_all, b["labels"],
-                  b.get("mask", jnp.ones(b["labels"].shape, jnp.float32)))
-                total = jnp.mean(task)
-                metrics = {"loss": total, "task_loss": total,
-                           "distill_loss": jnp.zeros(()),
-                           "task_loss_per_model": task,
-                           "distill_loss_per_model": jnp.zeros_like(task),
-                           "alpha": jnp.zeros(())}
-            total = total + jnp.mean(aux_all)
-            metrics["aux_loss"] = jnp.mean(aux_all)
-            metrics["accuracy"] = jnp.mean(jax.vmap(cd.accuracy)(
-                logits_all, b["labels"]))
-            return total, metrics
-
-        # microbatch axis sits AFTER the stacked model axis: (n, k, B/k, ...)
-        mb_batch = batch_all
-        if tc.microbatch > 1:
-            mb_batch = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batch_all)
-        grads, metrics = _grads_with_metrics(loss_fn, state.params, mb_batch,
-                                             tc.microbatch,
-                                             jnp.dtype(tc.accum_dtype))
-        params, opt = opt_update(state.params, grads, state.opt,
-                                 lr_fn(state.step), wd_fn(state.step),
-                                 trainable)
-        metrics.update(lr=lr_fn(state.step), wd=wd_fn(state.step))
-        return CodistState(params, opt, state.step + 1, state.stale,
-                           state.peer), metrics
-
-    return step
+    """DEPRECATED: prediction-exchange codistillation step (Algorithm 1,
+    coordinated sampling). ``distill=False`` selects the off-step variant
+    that omits the distillation term (and the cross-pod collective)."""
+    bundle = build_train_step(model, tc, codist, PredictionExchange(codist),
+                              trainable)
+    return bundle.variants["on" if distill else "off"]
 
 
 def make_codist_checkpoint_step(model, codist: CodistConfig, tc: TrainConfig,
                                 trainable: Optional[PyTree] = None
                                 ) -> Callable:
-    """Checkpoint-exchange codistillation (Anil et al.'s variant).
-
-    Every step: each model i draws its OWN batch x_i and distills against the
-    stale replicas' predictions on x_i — n-1 extra (gradient-free) forward
-    passes. Every T steps the host loop refreshes ``state.stale`` via
-    ``refresh_stale`` (the cross-pod parameter all-gather).
-    """
-    lr_fn, wd_fn, ls_fn, alpha_fn = make_schedules(tc, codist)
-    _, opt_update = make_optimizer(tc.optimizer, momentum=tc.momentum,
-                                   b1=tc.adam_b1, b2=tc.adam_b2,
-                                   dtype=tc.opt_dtype)
-    n = codist.n_models
-
-    def step(state: CodistState, batch_all: Dict) -> Tuple[CodistState, Dict]:
-        # peer_pairwise[i, j] = stale_j(x_i); computed once, no gradient
-        def stale_on_batch(batch_i):
-            return jax.vmap(
-                lambda sp: _task_forward(model, sp, batch_i, tc.remat)[0]
-            )(state.stale)
-        peer_pairwise = jax.lax.stop_gradient(
-            jax.vmap(stale_on_batch)(batch_all))          # (n_batch=i, n_model=j, ...)
-
-        def loss_fn(stacked):
-            logits_all, aux_all = _stacked_forward(model, stacked, batch_all,
-                                                   tc.remat)
-            total, metrics = cd.codist_loss(
-                codist, logits_all, batch_all["labels"], alpha_fn(state.step),
-                ls_fn(state.step), batch_all.get("mask"),
-                peer_pairwise=peer_pairwise, fused=tc.fused_losses)
-            total = total + jnp.mean(aux_all)
-            metrics["aux_loss"] = jnp.mean(aux_all)
-            return total, metrics
-
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(state.params)
-        params, opt = opt_update(state.params, grads, state.opt,
-                                 lr_fn(state.step), wd_fn(state.step),
-                                 trainable)
-        metrics.update(lr=lr_fn(state.step), wd=wd_fn(state.step))
-        return CodistState(params, opt, state.step + 1, state.stale,
-                           state.peer), metrics
-
-    return step
+    """DEPRECATED: checkpoint-exchange codistillation (Anil et al.)."""
+    return build_train_step(model, tc, codist, CheckpointExchange(codist),
+                            trainable).variants["on"]
 
 
-@jax.jit
-def refresh_stale(state: CodistState) -> CodistState:
-    """The checkpoint exchange: stale <- current params (cross-pod all-gather
-    in the sharded setting: params are pod-sharded, stale is pod-replicated)."""
-    return state._replace(stale=jax.tree.map(jnp.array, state.params))
-
-
-# ----------------------------------------------------------------------------
-# pipelined prediction exchange (beyond-paper: removes the sync point)
-# ----------------------------------------------------------------------------
-
-def make_codist_pipelined_step(model, codist: CodistConfig, tc: TrainConfig
+def make_codist_pipelined_step(model, codist: CodistConfig, tc: TrainConfig,
+                               trainable: Optional[PyTree] = None
                                ) -> Callable:
-    """Distills against the PREVIOUS exchange's peer logits, replaying the
-    previous (coordinated) batch for the distill term. Combined with
-    ``compression='subsample'`` the replay forward is cheap, and the logits
-    collective of step k-1 can overlap with step k's compute — the sync point
-    the paper flags for prediction exchange disappears.
-
-    state.peer = {"batch": prev batch_all, "logits": prev logits_all,
-                  "valid": bool}
-    """
-    lr_fn, wd_fn, ls_fn, alpha_fn = make_schedules(tc, codist)
-    _, opt_update = make_optimizer(tc.optimizer, momentum=tc.momentum,
-                                   b1=tc.adam_b1, b2=tc.adam_b2,
-                                   dtype=tc.opt_dtype)
-
-    def step(state: CodistState, batch_all: Dict) -> Tuple[CodistState, Dict]:
-        peer = state.peer
-
-        def loss_fn(stacked):
-            logits_all, aux_all = _stacked_forward(model, stacked, batch_all,
-                                                   tc.remat)
-            task = jax.vmap(
-                lambda lg, lb, m: cd.cross_entropy(lg, lb, ls_fn(state.step),
-                                                   m, fused=tc.fused_losses)
-            )(logits_all, batch_all["labels"],
-              batch_all.get("mask", jnp.ones(batch_all["labels"].shape,
-                                             jnp.float32)))
-            # replay forward on the previous batch for the distillation term
-            replay_logits, _ = _stacked_forward(model, stacked, peer["batch"],
-                                                tc.remat)
-            _, dmetrics = cd.codist_loss(
-                codist, replay_logits, peer["batch"]["labels"],
-                alpha_fn(state.step), 0.0, peer["batch"].get("mask"),
-                peer_logits_all=peer["logits"], fused=tc.fused_losses)
-            dist = dmetrics["distill_loss_per_model"]
-            alpha = alpha_fn(state.step) * peer["valid"].astype(jnp.float32)
-            total = jnp.mean(task + alpha * dist) + jnp.mean(aux_all)
-            return total, {"loss": total, "task_loss": jnp.mean(task),
-                           "distill_loss": jnp.mean(dist), "alpha": alpha,
-                           "aux_loss": jnp.mean(aux_all),
-                           "logits_all": logits_all}
-
-        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            state.params)
-        logits_all = metrics.pop("logits_all")
-        params, opt = opt_update(state.params, grads, state.opt,
-                                 lr_fn(state.step), wd_fn(state.step))
-        new_peer = {"batch": batch_all,
-                    "logits": jax.lax.stop_gradient(logits_all),
-                    "valid": jnp.ones((), jnp.bool_)}
-        return CodistState(params, opt, state.step + 1, state.stale,
-                           new_peer), metrics
-
-    return step
-
-
-def init_peer_state(batch_all: Dict, logits_shape: Tuple[int, ...]) -> Dict:
-    return {"batch": jax.tree.map(jnp.zeros_like, batch_all),
-            "logits": jnp.zeros(logits_shape, jnp.float32),
-            "valid": jnp.zeros((), jnp.bool_)}
-
-
-# ----------------------------------------------------------------------------
-# eval
-# ----------------------------------------------------------------------------
-
-def make_eval_step(model, tc: Optional[TrainConfig] = None) -> Callable:
-    fused = tc.fused_losses if tc is not None else None
-
-    def eval_step(params: PyTree, batch: Dict) -> Dict:
-        logits, _ = _task_forward(model, params, batch, False)
-        return {
-            "eval_loss": cd.cross_entropy(logits, batch["labels"],
-                                          0.0, batch.get("mask"),
-                                          fused=fused),
-            "eval_accuracy": cd.accuracy(logits, batch["labels"],
-                                         batch.get("mask")),
-        }
-    return eval_step
-
-
-def make_codist_eval_step(model, tc: Optional[TrainConfig] = None) -> Callable:
-    fused = tc.fused_losses if tc is not None else None
-
-    def eval_step(stacked_params: PyTree, batch_all: Dict) -> Dict:
-        logits_all, _ = _stacked_forward(model, stacked_params, batch_all, False)
-        loss = jax.vmap(lambda lg, lb: cd.cross_entropy(lg, lb, fused=fused))(
-            logits_all, batch_all["labels"])
-        acc = jax.vmap(cd.accuracy)(logits_all, batch_all["labels"])
-        return {"eval_loss": jnp.mean(loss), "eval_loss_per_model": loss,
-                "eval_accuracy": jnp.mean(acc), "eval_accuracy_per_model": acc}
-    return eval_step
+    """DEPRECATED: pipelined prediction exchange (previous-step targets)."""
+    return build_train_step(model, tc, codist, PipelinedPredictions(codist),
+                            trainable).variants["on"]

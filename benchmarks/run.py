@@ -14,6 +14,7 @@ Mapping to the paper:
     fig7        parameter-distance regularization effect
     table2      n-way gains at equal updates (view-diverse task)
     fig17       n-way with a fixed total update budget degrades
+    fault       codist vs all-reduce barrier under seeded fault injection
     throughput  step-variant microbench + kernel interpret timings
     roofline    §Roofline summary from the dry-run artifacts
 """
@@ -37,6 +38,7 @@ MODULES = [
     ("table2", "benchmarks.table2_nway"),
     ("fig17", "benchmarks.fig17_nway_fixed"),
     ("staleness", "benchmarks.staleness"),
+    ("fault", "benchmarks.fault_tolerance"),
     ("comm", "benchmarks.comm_sweep"),
     ("throughput", "benchmarks.throughput"),
     ("roofline", "benchmarks.roofline_table"),

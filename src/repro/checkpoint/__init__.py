@@ -1,1 +1,8 @@
-from repro.checkpoint.io import load_pytree, save_pytree  # noqa: F401
+from repro.checkpoint.io import (  # noqa: F401
+    has_snapshot,
+    load_pytree,
+    load_snapshot,
+    save_pytree,
+    save_snapshot,
+    snapshot_path,
+)

@@ -31,6 +31,25 @@ def save_pytree(path: str, tree: PyTree) -> None:
         json.dump({"treedef": str(treedef), "n_leaves": len(leaves)}, f)
 
 
+def snapshot_path(directory: str, peer: int) -> str:
+    """Keep-latest snapshot slot for one async-runtime peer."""
+    return os.path.join(directory, f"peer{peer}")
+
+
+def save_snapshot(directory: str, peer: int, state: PyTree) -> None:
+    """Overwrite peer's latest snapshot (the async runtime's recovery point:
+    a failed peer rejoins from here instead of a fresh init)."""
+    save_pytree(snapshot_path(directory, peer), state)
+
+
+def has_snapshot(directory: str, peer: int) -> bool:
+    return os.path.exists(snapshot_path(directory, peer) + ".npz")
+
+
+def load_snapshot(directory: str, peer: int, like: PyTree) -> PyTree:
+    return load_pytree(snapshot_path(directory, peer), like)
+
+
 def load_pytree(path: str, like: PyTree) -> PyTree:
     """Restore into the structure of ``like`` (shape/dtype template)."""
     data = np.load(path + ".npz")

@@ -49,6 +49,28 @@ def codist_prediction_bits(b_pred: float, batch: int, n: int, period: int) -> Co
     return CommCost((n - 1) * b_pred * batch / period, f"codist_pred_T{period}")
 
 
+def bits_per_exchange_event(scheme: str, n: int, b_model: float = 0.0,
+                            b_pred: float = 0.0, batch: int = 1) -> float:
+    """Bits crossing the slow links for ONE exchange event.
+
+    This is the event-based view the async runtime meters: one event is one
+    peer's exchange step, in which it receives the (n-1) other replicas'
+    payloads — predictions (``b_pred`` bits per sample, ``batch`` samples)
+    or parameters (``b_model``); all_reduce's event is the per-step gradient
+    ring (~2x the model per device). The per-iteration quantities above are
+    this divided by the exchange period, and
+    ``tests/test_comm_model.py`` asserts the mailbox-metered bytes of an
+    ``AsyncScheduler`` run agree with this formula exactly.
+    """
+    if scheme in ("all_reduce", "allreduce"):
+        return 2.0 * b_model
+    if scheme in ("predictions", "prediction"):
+        return (n - 1) * b_pred * batch
+    if scheme in ("checkpoints", "checkpoint"):
+        return (n - 1) * b_model
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
 # ----------------------------------------------------------------------------
 # model-aware helpers
 # ----------------------------------------------------------------------------

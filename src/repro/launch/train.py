@@ -11,6 +11,10 @@
     codist-ckpt       CheckpointExchange   Anil et al. stale replicas
     codist-pipelined  PipelinedPredictions previous-step targets
     codist-shardmap   ShardMapCompressed   explicit compressed pod exchange
+    codist-async      AsyncPrediction      virtual cluster on independent
+                                           step clocks (repro.runtime) with
+                                           seeded fault injection: --faults,
+                                           --elastic, --staleness-bound
 
 On this container it runs REDUCED configs on CPU with synthetic data; on a
 real cluster the same entrypoint takes the full config (drop ``--reduced``)
@@ -28,7 +32,7 @@ import sys
 import time
 
 MODES = ["codist", "codist-ckpt", "codist-pipelined", "codist-shardmap",
-         "allreduce"]
+         "codist-async", "allreduce"]
 
 
 def _ensure_pod_devices(argv) -> None:
@@ -85,6 +89,25 @@ def main() -> None:
                     help="custom-VJP Pallas loss kernels (auto: on for TPU; "
                          "'on' uses interpret mode on CPU — slow)")
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--faults", default="",
+                    help="codist-async fault spec, e.g. "
+                         "'straggler=1*4@0.2,preempt=1@3+5,fail=1@30,"
+                         "hetero=0.3' (see repro.runtime.parse_faults)")
+    ap.add_argument("--elastic", type=float, default=0.0,
+                    help="codist-async: a fresh peer joins at this simulated "
+                         "time (burn-in before it distills)")
+    ap.add_argument("--staleness-bound", type=int, default=-1,
+                    help="codist-async: drop peer payloads older than S "
+                         "local steps (-1 = keep-last, unbounded)")
+    ap.add_argument("--join-burn-in", type=int, default=5,
+                    help="codist-async: local steps a joining peer trains "
+                         "before its distillation loss activates")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="codist-async: snapshot each peer every N local "
+                         "steps (enables failure recovery)")
+    ap.add_argument("--recover-after", type=float, default=10.0,
+                    help="codist-async: simulated seconds before a failed "
+                         "peer rejoins from its snapshot")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
@@ -112,6 +135,65 @@ def main() -> None:
             make_lm_batch(task, args.batch, args.seq, 10_000 + step, None,
                           seed=args.seed + 1)
             for _ in range(args.codist_n)])
+
+    if args.mode == "codist-async":
+        from dataclasses import replace as _replace
+
+        from repro.runtime import AsyncScheduler, parse_faults
+
+        faults = parse_faults(args.faults, args.codist_n, seed=args.seed)
+        if args.elastic > 0:
+            faults = _replace(faults,
+                              joins=((faults.n_peers, args.elastic),))
+        codist = CodistConfig(
+            n_models=args.codist_n, mode="predictions", period=args.period,
+            alpha0=args.alpha, alpha_growth=args.alpha_growth,
+            distill_loss=args.distill_loss, compression=args.compression,
+            topk=args.topk, steps_per_epoch=max(1, args.steps // 10))
+
+        def async_batches(step):
+            return make_lm_batch(task, args.batch, args.seq, step, None,
+                                 seed=args.seed)
+
+        ckpt_dir = None
+        if args.checkpoint_every:
+            ckpt_dir = os.path.join(args.out or ".", "runtime_ckpt")
+        t0 = time.time()
+        report = AsyncScheduler(
+            model, tc, codist, async_batches, faults,
+            staleness_bound=(None if args.staleness_bound < 0
+                             else args.staleness_bound),
+            checkpoint_dir=ckpt_dir, checkpoint_every=args.checkpoint_every,
+            recover_after=(args.recover_after if args.checkpoint_every
+                           else None),
+            join_burn_in=args.join_burn_in, log_every=args.log_every).run()
+        dt = time.time() - t0
+        for pid in sorted(report.histories):
+            for rec in report.histories[pid].records:
+                msg = " ".join(
+                    f"{k}={v:.4f}" if isinstance(v, float) else f"{k}={v}"
+                    for k, v in rec.items()
+                    if k in ("peer", "step", "task_loss", "distill_loss",
+                             "staleness", "alpha", "sim_time"))
+                print(msg, flush=True)
+        print(f"sim_time={report.sim_time:.2f} "
+              f"time_to_first={report.time_to_first:.2f} "
+              f"comm_events={report.comm_events} "
+              f"comm_bytes={report.comm_bytes:.0f} "
+              f"staleness_mean={report.staleness['staleness_mean']:.3f} "
+              f"dropped={report.staleness['payloads_dropped']}")
+        print(f"done: {args.steps} steps x {faults.n_total} peers "
+              f"in {dt:.1f}s (simulated {report.sim_time:.1f}s)")
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            report.save_histories(args.out)
+            from repro.checkpoint import save_pytree
+            for pid, st in report.states.items():
+                save_pytree(os.path.join(args.out, f"final_peer{pid}"),
+                            st.params)
+            print(f"wrote per-peer JSONL histories + checkpoints to "
+                  f"{args.out}")
+        return
 
     t0 = time.time()
     if args.mode == "allreduce":

@@ -1,0 +1,21 @@
+"""Asynchronous fault-tolerant peer runtime (deterministic virtual cluster).
+
+See docs/runtime.md: N codistilling peers on independent step clocks over a
+seeded simulated timeline — speed heterogeneity, straggler episodes,
+preemption, permanent failure with checkpoint recovery, and elastic
+membership — with predictions flowing through a timestamped mailbox under a
+staleness-bound policy.
+"""
+from repro.runtime.clock import (  # noqa: F401
+    FaultConfig,
+    FaultSchedule,
+    VirtualClock,
+    parse_faults,
+)
+from repro.runtime.mailbox import Mailbox, Payload, StalenessStats  # noqa: F401
+from repro.runtime.peer import PeerRuntime  # noqa: F401
+from repro.runtime.scheduler import (  # noqa: F401
+    AsyncScheduler,
+    RunReport,
+    simulate_allreduce,
+)

@@ -1,5 +1,6 @@
 from repro.train.engine import (  # noqa: F401
     AllReduce,
+    AsyncPrediction,
     CheckpointExchange,
     ExchangeStrategy,
     PipelinedPredictions,

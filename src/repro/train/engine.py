@@ -484,6 +484,130 @@ class PipelinedPredictions(ExchangeStrategy):
         return CodistState(params, opt, state.step + 1, state.stale, new_peer)
 
 
+class AsyncPrediction(ExchangeStrategy):
+    """Single-peer view of the prediction exchange for the async runtime.
+
+    The synchronous ``PredictionExchange`` computes every model's forward in
+    one vmapped step; in ``repro.runtime`` each peer runs on its OWN step
+    clock, so a step sees only this peer's params and the distillation
+    targets arrive from the host (``runtime.mailbox`` payloads posted by
+    peers on their own clocks). The operand is::
+
+        {"batch": <single-model batch>,
+         "peer_wire":      compressed-wire pytree (``compress_targets``,
+                           producer side), every leaf stacked (P, ...);
+                           zero-filled slots for absent peers
+         "peer_weight":    (P,)  1.0 accepted / 0.0 dropped-or-missing
+         "peer_staleness": (P,)  receiver_step - sender_step}
+
+    The traced loss is ``(task + alpha * dist + aux) / n_slots`` — exactly
+    this peer's share of ``codist_loss``'s mean over n models (every other
+    model's term is a constant w.r.t. this peer's params), so with fresh
+    same-step targets the gradient, and hence the whole trajectory, matches
+    the synchronous engine (pinned by ``tests/test_runtime.py``). The weight
+    vector implements the staleness-bound drop policy: dropped peers
+    contribute nothing, and when every payload is dropped the distillation
+    term (and alpha) vanishes — the step degrades to plain task training
+    instead of blocking, which is the fault-tolerance argument of Anil et
+    al. (arXiv:1804.03235). Metrics report the UNSCALED task/distill terms
+    plus the measured staleness of the targets actually used.
+    """
+
+    name = "async_prediction"
+    variants = ("on", "off")
+    stacked = False
+
+    def __init__(self, codist: CodistConfig, n_slots: Optional[int] = None):
+        super().__init__(codist)
+        # the divisor of the codist mean AND 1 + number of target slots;
+        # fixed at build time so elastic membership keeps shapes static
+        self.n_slots = max(2, n_slots or codist.n_models)
+
+    def init_state(self, model, tc, key, opt_init, example_batch=None):
+        return init_train_state(model, key, opt_init)
+
+    def plan(self, step: int) -> StepPlan:
+        # standalone use mirrors the synchronous prediction schedule; the
+        # AsyncScheduler drives variants directly from mailbox availability
+        return StepPlan.for_step(replace(self.codist, mode="predictions"),
+                                 step)
+
+    def variant_for(self, plan: StepPlan) -> str:
+        return "on" if plan.distill else "off"
+
+    def make_eval(self, model, tc):
+        return make_eval_step(model, tc)
+
+    def comm_bytes(self, model, state, operand, microbatch=0) -> float:
+        cfg = self.codist
+        try:
+            batch = operand["batch"] if "batch" in operand else operand
+            labels = batch["labels"]
+            seq = labels.shape[-1]
+            samples = labels.size // seq
+            b_pred = cm.prediction_bits_lm(model.cfg, seq, 32,
+                                           cfg.compression, cfg.topk,
+                                           cfg.subsample)
+            return (self.n_slots - 1) * b_pred * samples / 8.0
+        except (KeyError, AttributeError, TypeError):
+            return 0.0
+
+    def prepare(self, state, operand, k):
+        if k <= 1:
+            return operand
+        # batch leaves already carry the (k, B/k, ...) layout (single model);
+        # wire leaves arrive as (P, k, ...) and scalars-per-peer are tiled so
+        # the gradient-accumulation scan can slice a k axis off every leaf
+        return {"batch": operand["batch"],
+                "peer_wire": jax.tree.map(
+                    lambda x: jnp.swapaxes(x, 0, 1), operand["peer_wire"]),
+                "peer_weight": jnp.broadcast_to(
+                    operand["peer_weight"],
+                    (k,) + operand["peer_weight"].shape),
+                "peer_staleness": jnp.broadcast_to(
+                    operand["peer_staleness"],
+                    (k,) + operand["peer_staleness"].shape)}
+
+    def loss(self, model, tc, sch, state, params, operand, variant):
+        batch = operand["batch"] if "batch" in operand else operand
+        logits, aux = _task_forward(model, params, batch, tc.remat)
+        mask = batch.get("mask")
+        task = cd.cross_entropy(logits, batch["labels"], sch.ls(state.step),
+                                mask, fused=tc.fused_losses)
+        acc = cd.accuracy(logits, batch["labels"], mask)
+        n = self.n_slots
+        if variant != "on":
+            total = (task + aux) / n
+            metrics = {"loss": total, "task_loss": task,
+                       "distill_loss": jnp.zeros(()), "aux_loss": aux,
+                       "alpha": jnp.zeros(()), "accuracy": acc,
+                       "staleness": jnp.zeros(()),
+                       "peer_weight": jnp.zeros(())}
+            return total, metrics, None
+        wires = operand["peer_wire"]  # host-provided constants: no gradient
+        w = operand["peer_weight"].astype(jnp.float32)
+        st = operand["peer_staleness"].astype(jnp.float32)
+        ds = []
+        for j in range(jax.tree.leaves(wires)[0].shape[0]):
+            wire = jax.tree.map(lambda x: x[j], wires)
+            ds.append(cd.distill_vs_compressed(self.codist, logits, wire,
+                                               mask, fused=tc.fused_losses))
+        d = jnp.stack(ds)
+        wsum = jnp.sum(w)
+        denom = jnp.maximum(wsum, 1.0)   # == n-1 with a full fresh mailbox
+        dist = jnp.sum(w * d) / denom
+        stale = jnp.sum(w * st) / denom
+        alpha = sch.alpha(state.step) * (wsum > 0).astype(jnp.float32)
+        total = (task + alpha * dist + aux) / n
+        metrics = {"loss": total, "task_loss": task, "distill_loss": dist,
+                   "aux_loss": aux, "alpha": alpha, "accuracy": acc,
+                   "staleness": stale, "peer_weight": wsum}
+        return total, metrics, None
+
+    def post_update(self, state, params, opt, batch_all, aux, k):
+        return TrainState(params, opt, state.step + 1)
+
+
 class ShardMapCompressed(PredictionExchange):
     """Prediction exchange with an explicitly scheduled compressed wire.
 
@@ -578,7 +702,7 @@ def resolve_strategy(codist: Optional[CodistConfig],
 
 STRATEGIES = {cls.name: cls for cls in
               (AllReduce, PredictionExchange, CheckpointExchange,
-               PipelinedPredictions, ShardMapCompressed)}
+               PipelinedPredictions, ShardMapCompressed, AsyncPrediction)}
 
 
 # ----------------------------------------------------------------------------

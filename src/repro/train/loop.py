@@ -51,6 +51,22 @@ class History:
     def series(self, key: str) -> List[float]:
         return [r[key] for r in self.records if key in r]
 
+    def save(self, path: str) -> None:
+        """Persist as JSONL (one record per line) — async runs and benchmarks
+        stream trajectories to disk instead of keeping them in memory."""
+        import json
+        import os
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            for rec in self.records:
+                f.write(json.dumps(rec) + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "History":
+        import json
+        with open(path) as f:
+            return cls([json.loads(line) for line in f if line.strip()])
+
 
 def train(model, tc: TrainConfig, batches: Callable[[int], Dict],
           strategy: ExchangeStrategy, codist: Optional[CodistConfig] = None,

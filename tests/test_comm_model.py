@@ -66,3 +66,71 @@ def test_ratio_vs():
     a = cm.CommCost(100.0, "a")
     b = cm.CommCost(1.0, "b")
     assert b.ratio_vs(a) == pytest.approx(100.0)
+
+
+def test_bits_per_exchange_event_identities():
+    """Event-based accounting / period == the per-iteration Section-3 model."""
+    b_model, b_pred, batch, n = 8e8, 3.2e4, 256, 2
+    for period in (1, 5, 100):
+        assert (cm.bits_per_exchange_event("predictions", n, b_pred=b_pred,
+                                           batch=batch) / period
+                == pytest.approx(cm.codist_prediction_bits(
+                    b_pred, batch, n, period).bits_per_iter_per_device))
+        assert (cm.bits_per_exchange_event("checkpoints", n, b_model=b_model)
+                / period
+                == pytest.approx(cm.codist_checkpoint_bits(
+                    b_model, n, period).bits_per_iter_per_device))
+    assert cm.bits_per_exchange_event("all_reduce", n, b_model=b_model) \
+        == pytest.approx(cm.allreduce_bits(b_model).bits_per_iter_per_device)
+    with pytest.raises(ValueError):
+        cm.bits_per_exchange_event("bogus", 2)
+
+
+def test_async_scheduler_meters_match_event_model():
+    """The mailbox-metered bytes of a real AsyncScheduler run agree exactly
+    with ``bits_per_exchange_event``: one event = one peer's exchange step
+    receiving the (n-1) other replicas' prediction payloads."""
+    from dataclasses import replace
+
+    from repro.configs import CodistConfig, TrainConfig, get_reduced
+    from repro.data import MarkovLM, make_lm_batch
+    from repro.models import build_model
+    from repro.runtime import AsyncScheduler, FaultConfig, simulate_allreduce
+    from repro.train.engine import _param_bits
+
+    cfg = replace(get_reduced("qwen1.5-0.5b"), num_layers=1, d_model=32,
+                  d_ff=64, vocab_size=64, num_heads=2, num_kv_heads=2,
+                  head_dim=16)
+    model = build_model(cfg)
+    task = MarkovLM(vocab=64, seed=0)
+    b, s, steps, n = 4, 16, 5, 2
+    tc = TrainConfig(lr=1e-3, total_steps=steps, warmup_steps=2,
+                     optimizer="adamw", seed=0)
+    codist = CodistConfig(n_models=n, period=1)
+    batches = (lambda k: make_lm_batch(task, b, s, k, None, seed=0))
+    rep = AsyncScheduler(model, tc, codist, batches,
+                         FaultConfig(n_peers=n, seed=0),
+                         staleness_bound=0).run()
+    assert rep.comm_events == n * steps
+    b_pred = cm.prediction_bits_lm(cfg, s)  # fp32 payload over padded vocab
+    expected = cm.bits_per_exchange_event("predictions", n, b_pred=b_pred,
+                                          batch=b) / 8.0
+    assert rep.comm_bytes == pytest.approx(rep.comm_events * expected)
+
+    ar = simulate_allreduce(model, tc, batches,
+                            FaultConfig(n_peers=n, seed=0))
+    expected_ar = cm.bits_per_exchange_event(
+        "all_reduce", n, b_model=_param_bits(ar.states[0].params)) / 8.0
+    assert ar.comm_bytes == pytest.approx(ar.comm_events * expected_ar)
+
+    # producer-side compression: the mailbox carries (and meters) the
+    # compressed wire — topk fp32 vals + int32 idx per token
+    topk = replace(codist, compression="topk", topk=8)
+    rep_k = AsyncScheduler(model, tc, topk, batches,
+                           FaultConfig(n_peers=n, seed=0),
+                           staleness_bound=0).run()
+    b_pred_k = cm.prediction_bits_lm(cfg, s, compression="topk", topk=8)
+    expected_k = cm.bits_per_exchange_event("predictions", n,
+                                            b_pred=b_pred_k, batch=b) / 8.0
+    assert rep_k.comm_bytes == pytest.approx(rep_k.comm_events * expected_k)
+    assert rep_k.comm_bytes < rep.comm_bytes / 10

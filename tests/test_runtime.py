@@ -1,0 +1,288 @@
+"""Async fault-tolerant runtime: seeded determinism, staleness-bound parity
+with the synchronous prediction exchange, straggler/preemption semantics,
+checkpoint recovery, elastic membership, and History JSONL persistence."""
+import os
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CodistConfig, TrainConfig, get_reduced
+from repro.core.codistillation import model_slice
+from repro.data import MarkovLM, make_lm_batch
+from repro.models import build_model
+from repro.runtime import (AsyncScheduler, FaultConfig, FaultSchedule,
+                           parse_faults, simulate_allreduce)
+from repro.train import History, stack_batches, train_codist
+
+B, S = 4, 16
+TASK = MarkovLM(vocab=64, seed=0)
+
+
+def tiny_model():
+    cfg = replace(get_reduced("qwen1.5-0.5b"), num_layers=1, d_model=32,
+                  d_ff=64, vocab_size=64, num_heads=2, num_kv_heads=2,
+                  head_dim=16)
+    return build_model(cfg)
+
+
+def batches(step):
+    return make_lm_batch(TASK, B, S, step, None, seed=0)
+
+
+def coord_batches(n):
+    def fn(step):
+        return stack_batches([make_lm_batch(TASK, B, S, step, None, seed=0)
+                              for _ in range(n)])
+    return fn
+
+
+def tc_for(steps, **kw):
+    kw.setdefault("lr", 1e-3)
+    kw.setdefault("warmup_steps", 2)
+    kw.setdefault("optimizer", "adamw")
+    kw.setdefault("seed", 0)
+    return TrainConfig(total_steps=steps, **kw)
+
+
+# ----------------------------------------------------------------------------
+# determinism of the seeded schedule and of whole runs
+# ----------------------------------------------------------------------------
+
+def test_fault_schedule_deterministic():
+    cfg = FaultConfig(n_peers=3, seed=7, speed_sigma=0.4,
+                      straggler_peers=(1,), straggler_factor=4.0,
+                      straggler_frac=0.3)
+    a = FaultSchedule(cfg, 50)
+    b = FaultSchedule(cfg, 50)
+    np.testing.assert_array_equal(a.speeds, b.speeds)
+    np.testing.assert_array_equal(a.mult, b.mult)
+    c = FaultSchedule(replace(cfg, seed=8), 50)
+    assert not (np.array_equal(a.speeds, c.speeds)
+                and np.array_equal(a.mult, c.mult))
+    # straggler coverage lands near the requested fraction
+    frac = np.mean(a.mult[1] > 1.0)
+    assert 0.2 <= frac <= 0.45
+    assert np.all(a.mult[0] == 1.0)
+
+
+def test_same_seed_identical_run():
+    model = tiny_model()
+    tc = tc_for(6)
+    codist = CodistConfig(n_models=2, period=1)
+    faults = FaultConfig(n_peers=2, seed=3, speeds=(1.0, 1.6),
+                         preemptions=((1, 2, 4.0),))
+
+    def go():
+        return AsyncScheduler(model, tc, codist, batches, faults,
+                              staleness_bound=2).run()
+
+    r1, r2 = go(), go()
+    assert r1.completion == r2.completion
+    assert r1.staleness == r2.staleness
+    for p in (0, 1):
+        assert (r1.histories[p].series("task_loss")
+                == r2.histories[p].series("task_loss"))
+
+
+def test_mailbox_bills_each_transfer_once():
+    from repro.runtime import Mailbox
+    mb = Mailbox(None)
+    mb.post(1, 0, 0.0, {"vals": jnp.zeros((4,), jnp.float32)})  # 16 bytes
+    mb.collect(0, 0, [1])
+    mb.collect(0, 1, [1])  # keep-last re-read: receiver already holds it
+    assert mb.bytes_delivered == 16
+    assert mb.stats.accepted == 2  # staleness is still measured per use
+    mb.post(1, 1, 1.0, {"vals": jnp.zeros((4,), jnp.float32)})
+    mb.collect(0, 2, [1])
+    assert mb.bytes_delivered == 32
+
+
+def test_fault_config_rejects_bad_joins():
+    with pytest.raises(ValueError):
+        FaultConfig(n_peers=2, joins=((0, 5.0),))  # would replace incumbent
+    with pytest.raises(ValueError):
+        FaultConfig(n_peers=2, joins=((2, 5.0), (2, 9.0)))  # duplicate
+    assert FaultConfig(n_peers=2, joins=((2, 5.0), (3, 9.0))).n_total == 4
+
+
+def test_parse_faults_rejects_conflicting_stragglers():
+    with pytest.raises(ValueError):
+        parse_faults("straggler=0*2@0.5,straggler=1*8@0.1", 2)
+    f = parse_faults("straggler=0*2@0.5,straggler=1*2@0.5", 2)
+    assert f.straggler_peers == (0, 1)
+    assert f.straggler_factor == 2.0 and f.straggler_frac == 0.5
+
+
+def test_parse_faults_roundtrip():
+    f = parse_faults("straggler=1*4@0.25,preempt=0@3+5,fail=1@30,hetero=0.2",
+                     n_peers=2, seed=9)
+    assert f.straggler_peers == (1,)
+    assert f.straggler_factor == 4.0 and f.straggler_frac == 0.25
+    assert f.preemptions == ((0, 3, 5.0),)
+    assert f.failures == ((1, 30),)
+    assert f.speed_sigma == 0.2 and f.seed == 9
+    assert parse_faults("", 2).n_peers == 2
+    assert parse_faults("none", 2) == FaultConfig(n_peers=2)
+    with pytest.raises(ValueError):
+        parse_faults("bogus=1", 2)
+
+
+# ----------------------------------------------------------------------------
+# staleness-bound 0 == the synchronous prediction exchange
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("period", [1, 2])
+def test_s0_reproduces_sync_prediction_exchange(period):
+    model = tiny_model()
+    steps = 6
+    tc = tc_for(steps)
+    codist = CodistConfig(n_models=2, period=period)
+    rep = AsyncScheduler(model, tc, codist, batches,
+                         FaultConfig(n_peers=2, seed=0),
+                         staleness_bound=0).run()
+    assert rep.staleness["staleness_max"] == 0.0
+    assert rep.staleness["payloads_dropped"] == 0
+
+    state, hist = train_codist(model, codist, tc, coord_batches(2),
+                               log_every=1)
+    for p in (0, 1):
+        np.testing.assert_allclose(
+            rep.histories[p].series("task_loss"),
+            hist.series(f"task_loss_per_model_{p}"), atol=5e-5)
+        np.testing.assert_allclose(
+            rep.histories[p].series("distill_loss"),
+            hist.series(f"distill_loss_per_model_{p}"), atol=5e-5)
+        for a, b in zip(jax.tree.leaves(rep.states[p].params),
+                        jax.tree.leaves(model_slice(state.params, p))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-4)
+
+
+# ----------------------------------------------------------------------------
+# straggler / preemption semantics: barrier gates, async doesn't
+# ----------------------------------------------------------------------------
+
+def test_straggler_gates_barrier_not_async():
+    model = tiny_model()
+    tc = tc_for(8)
+    codist = CodistConfig(n_models=2, period=1)
+    clean = FaultConfig(n_peers=2, seed=0)
+    strag = FaultConfig(n_peers=2, seed=0, straggler_peers=(1,),
+                        straggler_factor=4.0, straggler_frac=0.5)
+
+    a_clean = AsyncScheduler(model, tc, codist, batches, clean,
+                             staleness_bound=2).run()
+    a_strag = AsyncScheduler(model, tc, codist, batches, strag,
+                             staleness_bound=2).run()
+    # healthy peer 0 never waits: its completion time is unchanged
+    assert a_strag.completion[0] == a_clean.completion[0]
+    assert a_strag.completion[1] > a_clean.completion[1]
+    assert a_strag.time_to_first == a_clean.time_to_first
+
+    r_clean = simulate_allreduce(model, tc, batches, clean)
+    r_strag = simulate_allreduce(model, tc, batches, strag)
+    assert r_strag.sim_time > r_clean.sim_time  # barrier pays for every slow step
+    # preemption stalls the whole barrier job by the pause
+    pre = FaultConfig(n_peers=2, seed=0, preemptions=((1, 3, 7.0),))
+    r_pre = simulate_allreduce(model, tc, batches, pre)
+    assert r_pre.sim_time == pytest.approx(r_clean.sim_time + 7.0)
+    a_pre = AsyncScheduler(model, tc, codist, batches, pre,
+                           staleness_bound=None).run()
+    assert a_pre.completion[0] == a_clean.completion[0]
+
+
+def test_staleness_bound_drop_vs_keep_last():
+    model = tiny_model()
+    tc = tc_for(8)
+    codist = CodistConfig(n_models=2, period=1)
+    hetero = FaultConfig(n_peers=2, seed=0, speeds=(1.0, 2.0))
+    keep = AsyncScheduler(model, tc, codist, batches, hetero,
+                          staleness_bound=None).run()
+    assert keep.staleness["payloads_dropped"] == 0
+    assert keep.staleness["staleness_max"] > 0
+    drop = AsyncScheduler(model, tc, codist, batches, hetero,
+                          staleness_bound=0).run()
+    assert drop.staleness["payloads_dropped"] > 0
+    assert drop.staleness["staleness_max"] == 0.0
+    # dropped payloads mean those steps trained task-only (alpha gated off)
+    alphas = drop.histories[0].series("alpha")
+    assert 0.0 in alphas
+
+
+# ----------------------------------------------------------------------------
+# failure + checkpoint recovery, elastic membership
+# ----------------------------------------------------------------------------
+
+def test_failure_recovers_from_checkpoint_and_converges(tmp_path):
+    model = tiny_model()
+    steps = 12
+    tc = tc_for(steps, lr=3e-3)
+    codist = CodistConfig(n_models=2, period=1)
+    faults = FaultConfig(n_peers=2, seed=0, failures=((1, 8),))
+    rep = AsyncScheduler(model, tc, codist, batches, faults,
+                         staleness_bound=None, checkpoint_dir=str(tmp_path),
+                         checkpoint_every=3, recover_after=5.0).run()
+    # the failed peer rewound to its step-6 snapshot, replayed, and finished
+    assert rep.completion[1] > rep.completion[0]
+    assert sorted(rep.completion) == [0, 1]
+    hist1 = rep.histories[1]
+    steps_logged = hist1.series("step")
+    assert steps_logged != sorted(set(steps_logged))  # replayed steps appear twice
+    assert max(steps_logged) == steps - 1
+    assert rep.final_task_loss[1] < hist1.series("task_loss")[0]
+
+    # without a checkpoint dir the failed peer stays dead
+    dead = AsyncScheduler(model, tc, codist, batches, faults,
+                          staleness_bound=None).run()
+    assert 1 not in dead.completion and 0 in dead.completion
+
+
+def test_elastic_join_burns_in_then_distills():
+    model = tiny_model()
+    steps = 10
+    tc = tc_for(steps)
+    codist = CodistConfig(n_models=2, period=1)
+    faults = FaultConfig(n_peers=2, seed=0, joins=((2, 3.0),))
+    rep = AsyncScheduler(model, tc, codist, batches, faults,
+                         staleness_bound=None, join_burn_in=4).run()
+    assert set(rep.completion) == {0, 1, 2}
+    # joiner trains task-only through burn-in, then its distill loss activates
+    alphas = rep.histories[2].series("alpha")
+    assert alphas[:4] == [0.0] * 4
+    assert any(a > 0 for a in alphas[4:])
+    # the joiner's distill targets only flow once it publishes (post burn-in):
+    # incumbents see weight 1 (each other) throughout, weight 2 after
+    w0 = rep.histories[0].series("peer_weight")
+    assert w0[0] == 1.0 and max(w0) == 2.0
+    assert rep.completion[2] == pytest.approx(3.0 + steps)
+
+
+# ----------------------------------------------------------------------------
+# History JSONL persistence
+# ----------------------------------------------------------------------------
+
+def test_history_jsonl_roundtrip(tmp_path):
+    h = History()
+    h.log(0, {"loss": jnp.asarray(1.5), "vec": jnp.asarray([1.0, 2.0])},
+          sim_time=0.25)
+    h.log(5, {"loss": jnp.asarray(0.5)}, sim_time=5.0)
+    path = os.path.join(str(tmp_path), "sub", "hist.jsonl")
+    h.save(path)
+    loaded = History.load(path)
+    assert loaded.records == h.records
+    assert loaded.series("loss") == [1.5, 0.5]
+    assert loaded.last("vec_1") == 2.0
+
+
+def test_report_save_histories(tmp_path):
+    model = tiny_model()
+    tc = tc_for(4)
+    codist = CodistConfig(n_models=2, period=1)
+    rep = AsyncScheduler(model, tc, codist, batches,
+                         FaultConfig(n_peers=2, seed=0)).run()
+    rep.save_histories(str(tmp_path))
+    h0 = History.load(os.path.join(str(tmp_path), "peer0.jsonl"))
+    assert h0.series("task_loss") == rep.histories[0].series("task_loss")

@@ -5,7 +5,10 @@
 
 Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally writes
 the rows as a JSON document (the committed ``BENCH_throughput.json`` perf
-trajectory is ``--only throughput --quick --json BENCH_throughput.json``).
+trajectory is ``--only throughput,fault,sweep_smoke --quick --json
+BENCH_throughput.json``; ``tools/bench_compare.py`` gates CI runs against
+it — see docs/experiments.md). Unknown ``--only`` names exit 2 with the
+registered list.
 Mapping to the paper:
     fig1        communication trade-off (analytic + compiled-HLO cross-pod bytes)
     fig2        regularization-schedule necessity (constant vs decayed WD)
@@ -15,6 +18,7 @@ Mapping to the paper:
     table2      n-way gains at equal updates (view-diverse task)
     fig17       n-way with a fixed total update budget degrades
     fault       codist vs all-reduce barrier under seeded fault injection
+    sweep_smoke paper-grid sweep harness end-to-end (run/resume/aggregate)
     throughput  step-variant microbench + kernel interpret timings
     roofline    §Roofline summary from the dry-run artifacts
 """
@@ -29,20 +33,22 @@ import traceback
 
 from benchmarks.common import emit
 
-MODULES = [
-    ("fig1", "benchmarks.fig1_comm"),
-    ("fig2", "benchmarks.fig2_regschedule"),
-    ("table1", "benchmarks.table1_scaling"),
-    ("fig6", "benchmarks.fig6_multiview"),
-    ("fig7", "benchmarks.fig7_reg"),
-    ("table2", "benchmarks.table2_nway"),
-    ("fig17", "benchmarks.fig17_nway_fixed"),
-    ("staleness", "benchmarks.staleness"),
-    ("fault", "benchmarks.fault_tolerance"),
-    ("comm", "benchmarks.comm_sweep"),
-    ("throughput", "benchmarks.throughput"),
-    ("roofline", "benchmarks.roofline_table"),
-]
+# single registry shared with tooling: name -> module exporting run(quick)
+REGISTRY = {
+    "fig1": "benchmarks.fig1_comm",
+    "fig2": "benchmarks.fig2_regschedule",
+    "table1": "benchmarks.table1_scaling",
+    "fig6": "benchmarks.fig6_multiview",
+    "fig7": "benchmarks.fig7_reg",
+    "table2": "benchmarks.table2_nway",
+    "fig17": "benchmarks.fig17_nway_fixed",
+    "staleness": "benchmarks.staleness",
+    "fault": "benchmarks.fault_tolerance",
+    "sweep_smoke": "benchmarks.sweep_smoke",
+    "comm": "benchmarks.comm_sweep",
+    "throughput": "benchmarks.throughput",
+    "roofline": "benchmarks.roofline_table",
+}
 
 
 def main() -> None:
@@ -55,11 +61,18 @@ def main() -> None:
                     help="also write all rows to this JSON file")
     args = ap.parse_args()
     only = set(filter(None, args.only.split(",")))
+    unknown = only - set(REGISTRY)
+    if unknown:
+        # an unknown --only used to silently run NOTHING and exit 0
+        print(f"unknown benchmark(s): {', '.join(sorted(unknown))}",
+              file=sys.stderr)
+        print(f"registered: {', '.join(REGISTRY)}", file=sys.stderr)
+        sys.exit(2)
 
     print("name,us_per_call,derived")
     failures = 0
     all_rows = []
-    for name, modpath in MODULES:
+    for name, modpath in REGISTRY.items():
         if only and name not in only:
             continue
         t0 = time.time()

@@ -1,0 +1,79 @@
+"""Sweep-harness smoke: the paper-grid pipeline end-to-end on a 2-cell grid
+(one all-reduce baseline + one codist cell; the allreduce cell's alpha and
+peers axes collapse in expansion).
+
+Runs expand -> run -> resume (must be a no-op) -> aggregate on an inline
+:class:`~repro.experiments.SweepSpec` in a temp directory, and emits the
+aggregate's headline numbers as benchmark rows so the committed
+``BENCH_throughput.json`` trajectory (and the CI regression gate over it)
+covers the experiment subsystem too:
+
+    sweep/cells_total          cells the grid expanded to (and ran)
+    sweep/resume_noop          1 iff the resume pass re-ran nothing
+    sweep/codist_gap_const     codist-vs-allreduce final-loss gap
+    sweep/baseline_comm_bytes  all-reduce cumulative comm (deterministic)
+    sweep/codist_comm_bytes    codist cumulative comm (deterministic)
+
+Every row reports ``us_per_call=0`` and a DETERMINISTIC ``derived``: the
+sweep's wall time is dominated by per-cell jit compilation, which varies
+several-fold run-to-run, so it is printed to stderr rather than landing in
+the committed baseline (where it would churn every re-bless and feed the
+``bench_compare`` timing gate pure noise). The comm_bytes rows ARE gated
+(exactly).
+"""
+from __future__ import annotations
+
+import sys
+import tempfile
+import time
+from typing import Dict, List
+
+def run(quick: bool = False) -> List[Dict]:
+    from repro.experiments import (AlphaPoint, SweepSpec, TINY_OVERRIDES,
+                                   aggregate, run_sweep, sweep_dir_for)
+
+    spec = SweepSpec(
+        name="sweep_smoke", seq_len=8, steps=3 if quick else 10,
+        batch_sizes=(2,), modes=("allreduce", "codist"),
+        alpha_schedules=(AlphaPoint("const"),), peers=(2,),
+        model_overrides=TINY_OVERRIDES)
+
+    def quiet(_msg):
+        pass
+
+    rows: List[Dict] = []
+    with tempfile.TemporaryDirectory() as td:
+        t0 = time.perf_counter()
+        results = run_sweep(spec, td, log=quiet)
+        run_s = time.perf_counter() - t0
+        bad = [r for r in results if r.status == "failed"]
+        if bad:
+            # surface the failure as a benchmark ERROR row (exit 1 from
+            # benchmarks.run) instead of emitting '-' rows the regression
+            # gate would skip
+            raise RuntimeError(
+                f"{len(bad)} sweep cell(s) failed: "
+                + "; ".join(f"{r.cell.cell_id}: {r.error}" for r in bad))
+        resumed = run_sweep(spec, td, resume=True, log=quiet)
+        noop = int(all(r.status == "skipped" for r in resumed))
+        doc = aggregate(sweep_dir_for(spec.name, td), spec.name,
+                        {c.cell_id for c in spec.cells()})
+
+        print(f"# sweep_smoke: {len(results)} cells in {run_s:.1f}s",
+              file=sys.stderr)
+        by_mode = {r["mode"]: r for r in doc["grid"]}
+        ran = sum(1 for r in results if r.status == "ran")
+        rows.append({"name": "sweep/cells_total", "us_per_call": 0.0,
+                     "derived": f"{len(results)}_cells_ran_{ran}"})
+        rows.append({"name": "sweep/resume_noop", "us_per_call": 0.0,
+                     "derived": str(noop)})
+        gap = by_mode.get("codist", {}).get("gap_vs_allreduce")
+        rows.append({"name": "sweep/codist_gap_const", "us_per_call": 0.0,
+                     "derived": "-" if gap is None else f"{gap:.4f}"})
+        for mode, label in (("allreduce", "baseline"), ("codist", "codist")):
+            comm = by_mode.get(mode, {}).get("comm_bytes_mean")
+            rows.append({
+                "name": f"sweep/{label}_comm_bytes", "us_per_call": 0.0,
+                "derived": ("-" if comm is None
+                            else f"comm_bytes={comm:.0f}")})
+    return rows

@@ -1,0 +1,78 @@
+"""Sweep launcher: expand -> run -> aggregate a paper-grid spec.
+
+    PYTHONPATH=src python -m repro.launch.sweep \\
+        --spec experiments/specs/paper_grid_small.yaml \\
+        [--out results/sweeps] [--resume] [--max-cells N] [--steps N] \\
+        [--list] [--aggregate-only] [--no-aggregate]
+
+Cells persist individually under ``<out>/<spec.name>/`` as they complete
+(``<cell_id>.jsonl`` history + ``<cell_id>.json`` summary), so a killed
+sweep resumes with ``--resume`` (completed cells are validated and
+skipped — rerunning a finished sweep with ``--resume`` is a no-op, which
+CI asserts). Aggregation runs after every sweep (and standalone via
+``--aggregate-only``), writing ``SWEEP_<name>.json`` + ``SWEEP_<name>.md``
+with the per-cell codist-vs-allreduce gaps. See docs/experiments.md.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.sweep",
+        description="Run a declarative paper-grid sweep spec.")
+    ap.add_argument("--spec", required=True,
+                    help="path to a .yaml/.json SweepSpec")
+    ap.add_argument("--out", default="results/sweeps",
+                    help="results root; cells land in <out>/<spec.name>/")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose persisted result validates")
+    ap.add_argument("--max-cells", type=int, default=0,
+                    help="run only the first N cells of the expansion")
+    ap.add_argument("--steps", type=int, default=0,
+                    help="override the spec's per-cell step count")
+    ap.add_argument("--list", action="store_true",
+                    help="print the expanded cell ids and exit")
+    ap.add_argument("--aggregate-only", action="store_true",
+                    help="skip running; aggregate existing results")
+    ap.add_argument("--no-aggregate", action="store_true",
+                    help="run cells but skip the aggregation pass")
+    args = ap.parse_args(argv)
+
+    from repro.experiments import (aggregate_and_write, load_spec, run_sweep,
+                                   sweep_dir_for)
+
+    spec = load_spec(args.spec)
+    cells = spec.cells()
+    if args.list:
+        for c in cells:
+            print(c.cell_id)
+        print(f"# {len(cells)} cells ({spec.name})")
+        return 0
+
+    failed = 0
+    if not args.aggregate_only:
+        results = run_sweep(spec, args.out, resume=args.resume,
+                            max_cells=args.max_cells or None,
+                            steps=args.steps or None)
+        failed = sum(1 for r in results if r.status == "failed")
+
+    if not args.no_aggregate:
+        doc, json_path, md_path = aggregate_and_write(spec, args.out)
+        print(f"aggregated {doc['n_cells']} cells -> {json_path}, {md_path}")
+        for row in doc["grid"]:
+            if row["gap_vs_allreduce"] is not None:
+                print(f"  gap[{row['mode']} b{row['batch']} {row['lr']} "
+                      f"{row['alpha']} n{row['peers']}] = "
+                      f"{row['gap_vs_allreduce']:+.4f}")
+        if not doc["n_cells"]:
+            print(f"warning: no completed cells under "
+                  f"{sweep_dir_for(spec.name, args.out)}", file=sys.stderr)
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

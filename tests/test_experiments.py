@@ -1,0 +1,400 @@
+"""Paper-grid experiment harness + CI benchmark regression gate.
+
+Covers the ISSUE-4 acceptance surface: spec expansion count / dedup /
+canonicalization, the YAML/JSON loader and the two committed specs, seeded
+cell determinism (same spec+seed => bit-identical final losses), crash-safe
+resume (valid results skipped, corrupt ones re-run), aggregate math pinned
+on a synthetic fixture, and the ``tools/bench_compare.py`` gate fed a
+doctored regressed row.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.experiments import (AlphaPoint, LRPoint, SweepSpec,
+                               TINY_OVERRIDES, aggregate, cell_paths,
+                               load_spec, run_cell, run_sweep,
+                               spec_from_dict, summary_is_valid,
+                               sweep_dir_for, write_outputs)
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def tiny_spec(**kw) -> SweepSpec:
+    base = dict(name="t", seq_len=8, steps=3, batch_sizes=(2,),
+                modes=("allreduce", "codist"),
+                alpha_schedules=(AlphaPoint("const"),), peers=(2,),
+                model_overrides=TINY_OVERRIDES)
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+# ----------------------------------------------------------------------------
+# spec expansion
+# ----------------------------------------------------------------------------
+
+class TestSpec:
+    def test_expansion_count_and_dedup(self):
+        spec = tiny_spec(
+            batch_sizes=(2, 4), seeds=(0, 1),
+            alpha_schedules=(AlphaPoint("const"),
+                             AlphaPoint("burnin", burn_in_frac=0.25)),
+            peers=(2, 4))
+        cells = spec.cells()
+        # raw cross-product is 2*2*2*2*2 = 32 per-mode... but allreduce
+        # collapses alpha x peers: per batch = 2 seeds (allreduce)
+        # + 2 alpha * 2 peers * 2 seeds (codist) = 10; two batches => 20
+        assert len(cells) == 20
+        ids = [c.cell_id for c in cells]
+        assert len(ids) == len(set(ids))
+
+    def test_allreduce_canonicalization(self):
+        cells = tiny_spec().cells()
+        base = [c for c in cells if c.mode == "allreduce"]
+        assert base and all(c.peers == 1 and c.alpha.name == "none"
+                            for c in base)
+
+    def test_baseline_first_ordering(self):
+        cells = tiny_spec(batch_sizes=(2, 4)).cells()
+        for batch in (2, 4):
+            group = [c for c in cells if c.batch == batch]
+            assert group[0].mode == "allreduce"
+
+    def test_lr_linear_scaling(self):
+        lr = LRPoint("scaled", lr=1e-3, scale_with_batch=True,
+                     base_batch=256)
+        assert lr.resolve_lr(256) == pytest.approx(1e-3)
+        assert lr.resolve_lr(64) == pytest.approx(2.5e-4)
+        assert LRPoint("flat", lr=1e-3).resolve_lr(64) == pytest.approx(1e-3)
+
+    def test_validation_errors(self):
+        with pytest.raises(ValueError, match="unknown mode"):
+            tiny_spec(modes=("codist", "nope"))
+        with pytest.raises(ValueError, match="duplicate"):
+            tiny_spec(alpha_schedules=(AlphaPoint("a"), AlphaPoint("a")))
+        # distinct names that SLUG identically would silently merge cells
+        with pytest.raises(ValueError, match="after slugging"):
+            tiny_spec(alpha_schedules=(AlphaPoint("run-1"),
+                                       AlphaPoint("run_1", alpha0=0.5)))
+        with pytest.raises(ValueError, match="after slugging"):
+            tiny_spec(lr_schedules=(LRPoint("a b"), LRPoint("a_b", lr=1e-4)))
+        with pytest.raises(ValueError, match="unknown spec field"):
+            spec_from_dict({"name": "x", "not_a_field": 1})
+        # an empty axis must not silently expand to a zero-cell sweep
+        with pytest.raises(ValueError, match="non-empty"):
+            tiny_spec(peers=())
+        with pytest.raises(ValueError, match="non-empty"):
+            tiny_spec(batch_sizes=())
+
+    def test_loader_json_and_yaml_roundtrip(self, tmp_path):
+        doc = {"name": "rt", "steps": 7, "batch_sizes": [2, 4],
+               "modes": ["allreduce", "codist"],
+               "lr_schedules": [{"name": "c", "kind": "cosine", "lr": 2e-3}],
+               "alpha_schedules": [{"name": "ramp", "alpha0": 0.3,
+                                    "growth": 1.1}],
+               "peers": [2], "model_overrides": {"d_model": 64}}
+        jpath = tmp_path / "s.json"
+        jpath.write_text(json.dumps(doc))
+        spec_j = load_spec(str(jpath))
+        assert spec_j.steps == 7
+        assert spec_j.lr_schedules[0].lr == pytest.approx(2e-3)
+        assert spec_j.alpha_schedules[0].growth == pytest.approx(1.1)
+        assert dict(spec_j.model_overrides) == {"d_model": 64}
+
+        yaml = pytest.importorskip("yaml")
+        ypath = tmp_path / "s.yaml"
+        ypath.write_text(yaml.safe_dump(doc))
+        assert load_spec(str(ypath)) == spec_j
+
+    def test_committed_specs_expand(self):
+        small = load_spec(os.path.join(
+            REPO, "experiments", "specs", "paper_grid_small.yaml"))
+        cells = small.cells()
+        assert len(cells) == 6  # pinned: the CI spec's documented size
+        modes = {c.mode for c in cells}
+        assert modes == {"allreduce", "codist"}
+        full = load_spec(os.path.join(
+            REPO, "experiments", "specs", "paper_grid.yaml"))
+        assert len(full.cells()) == 888  # pinned: documented expansion
+
+
+# ----------------------------------------------------------------------------
+# runner: determinism + crash-safe resume
+# ----------------------------------------------------------------------------
+
+class TestRunner:
+    def test_seeded_cell_determinism(self):
+        spec = tiny_spec(modes=("codist",))
+        (cell,) = spec.cells()
+        s1, h1 = run_cell(cell)
+        s2, h2 = run_cell(cell)
+        # same spec + seed => bit-identical trajectory, not just close
+        assert s1["final"]["task_loss"] == s2["final"]["task_loss"]
+        assert h1.series("loss") == h2.series("loss")
+        (other,) = tiny_spec(modes=("codist",), seeds=(1,)).cells()
+        s3, _ = run_cell(other)
+        assert s3["final"]["task_loss"] != s1["final"]["task_loss"]
+
+    def test_resume_skips_completed_and_reruns_corrupt(self, tmp_path):
+        spec = tiny_spec()
+        out = str(tmp_path)
+        first = run_sweep(spec, out, log=lambda _m: None)
+        assert [r.status for r in first] == ["ran", "ran"]
+
+        again = run_sweep(spec, out, resume=True, log=lambda _m: None)
+        assert [r.status for r in again] == ["skipped", "skipped"]
+        assert all(r.summary is not None for r in again)
+
+        # a corrupt summary invalidates exactly that cell
+        sweep_dir = sweep_dir_for(spec.name, out)
+        victim = again[1].cell
+        summary_path, _ = cell_paths(sweep_dir, victim)
+        with open(summary_path, "w") as f:
+            f.write("{not json")
+        assert not summary_is_valid(sweep_dir, victim, victim.steps)
+        third = run_sweep(spec, out, resume=True, log=lambda _m: None)
+        assert sorted(r.status for r in third) == ["ran", "skipped"]
+
+        # a different step count invalidates persisted results too
+        assert not summary_is_valid(sweep_dir, again[0].cell, 99)
+
+        # so does a spec edit that keeps every axis NAME but changes a
+        # value (same cell_id, different experiment)
+        relr = tiny_spec(lr_schedules=(LRPoint("cos", lr=5e-4),))
+        for cell in relr.cells():
+            assert not summary_is_valid(sweep_dir, cell, cell.steps)
+
+        # end-to-end aggregate over the run directory
+        doc = aggregate(sweep_dir, spec.name)
+        assert doc["n_cells"] == 2
+        by_mode = {r["mode"]: r for r in doc["grid"]}
+        assert by_mode["allreduce"]["gap_vs_allreduce"] is None
+        assert by_mode["codist"]["gap_vs_allreduce"] == pytest.approx(
+            by_mode["codist"]["final_loss_mean"]
+            - by_mode["allreduce"]["final_loss_mean"])
+        assert by_mode["codist"]["comm_bytes_mean"] > 0
+        json_path, md_path = write_outputs(doc, sweep_dir)
+        assert os.path.exists(json_path) and os.path.exists(md_path)
+        assert "gap vs all-reduce" in open(md_path).read()
+
+
+# ----------------------------------------------------------------------------
+# aggregate math on a synthetic fixture (no jax, exact numbers)
+# ----------------------------------------------------------------------------
+
+def _write_cell(sweep_dir, cell_id, mode, batch, lr, alpha, peers, seed,
+                final_loss, records):
+    os.makedirs(sweep_dir, exist_ok=True)
+    with open(os.path.join(sweep_dir, f"{cell_id}.jsonl"), "w") as f:
+        for rec in records:
+            f.write(json.dumps(rec) + "\n")
+    summary = {
+        "schema": 1, "status": "complete", "cell_id": cell_id,
+        "cell": {"seed": seed},
+        "grid_key": [mode, batch, lr, alpha, peers],
+        "baseline_key": [batch, lr],
+        "steps": records[-1]["step"] + 1,
+        "final": {"task_loss": final_loss, "loss": final_loss,
+                  "comm_bytes": records[-1].get("comm_bytes", 0),
+                  "comm_events": len(records)},
+    }
+    with open(os.path.join(sweep_dir, f"{cell_id}.json"), "w") as f:
+        json.dump(summary, f)
+
+
+class TestAggregate:
+    def test_aggregate_math(self, tmp_path):
+        d = str(tmp_path / "synthetic")
+        # baseline: two seeds, finals 1.0 and 2.0 => L* = 1.5; quality
+        # levels 2.25 / 1.8 / 1.575 all crossed at step 1 (comm=20 resp 40)
+        _write_cell(d, "ar-s0", "allreduce", 2, "cos", "none", 1, 0, 1.0,
+                    [{"step": 0, "task_loss": 3.0, "comm_bytes": 10},
+                     {"step": 1, "task_loss": 1.0, "comm_bytes": 20}])
+        _write_cell(d, "ar-s1", "allreduce", 2, "cos", "none", 1, 1, 2.0,
+                    [{"step": 0, "task_loss": 3.0, "comm_bytes": 20},
+                     {"step": 1, "task_loss": 2.0, "comm_bytes": 40}])
+        # codist: finals 2.0 and 2.5 => mean 2.25, range 0.5, gap +0.75;
+        # seed 0 crosses 2.25 at step 1 (comm=8), seed 1 never does
+        _write_cell(d, "co-s0", "codist", 2, "cos", "const", 2, 0, 2.0,
+                    [{"step": 0, "task_loss": 3.0, "comm_bytes": 4},
+                     {"step": 1, "task_loss": 2.0, "comm_bytes": 8}])
+        _write_cell(d, "co-s1", "codist", 2, "cos", "const", 2, 1, 2.5,
+                    [{"step": 0, "task_loss": 3.0, "comm_bytes": 4},
+                     {"step": 1, "task_loss": 2.5, "comm_bytes": 8}])
+
+        doc = aggregate(d, "synthetic")
+        assert doc["n_cells"] == 4
+        by_mode = {r["mode"]: r for r in doc["grid"]}
+        ar, co = by_mode["allreduce"], by_mode["codist"]
+        assert ar["final_loss_mean"] == pytest.approx(1.5)
+        assert ar["final_loss_range"] == pytest.approx(1.0)
+        assert ar["gap_vs_allreduce"] is None
+        assert co["final_loss_mean"] == pytest.approx(2.25)
+        assert co["final_loss_min"] == pytest.approx(2.0)
+        assert co["final_loss_max"] == pytest.approx(2.5)
+        assert co["final_loss_range"] == pytest.approx(0.5)
+        assert co["gap_vs_allreduce"] == pytest.approx(0.75)
+        assert co["seeds"] == [0, 1]
+        # quality levels come off the baseline: factor * 1.5
+        levels = doc["quality_levels"]["b2-cos@2steps"]
+        assert levels["1.5x"] == pytest.approx(2.25)
+        assert levels["1.05x"] == pytest.approx(1.575)
+        # baseline crossings: mean(20, 40) = 30 at every level
+        assert ar["bytes_to_quality"]["1.5x"] == pytest.approx(30.0)
+        # codist: only seed 0 reaches 2.25 (at comm=8); seed 1 never does,
+        # so the mean is over the cells that reached the level
+        assert co["bytes_to_quality"]["1.5x"] == pytest.approx(8.0)
+        assert co["bytes_to_quality"]["1.05x"] is None
+
+    def test_aggregate_never_mixes_step_counts(self, tmp_path):
+        # same cell ids re-run at a different --steps: rows must stay
+        # separate and gaps only compare within equal training lengths
+        d = str(tmp_path / "mixed")
+        _write_cell(d, "ar-s0", "allreduce", 2, "cos", "none", 1, 0, 1.0,
+                    [{"step": 0, "task_loss": 2.0, "comm_bytes": 10},
+                     {"step": 1, "task_loss": 1.0, "comm_bytes": 20}])
+        _write_cell(d, "co-s0", "codist", 2, "cos", "const", 2, 0, 1.5,
+                    [{"step": 0, "task_loss": 2.0, "comm_bytes": 4},
+                     {"step": 1, "task_loss": 1.5, "comm_bytes": 8},
+                     {"step": 2, "task_loss": 1.5, "comm_bytes": 12}])
+        doc = aggregate(d, "mixed")
+        assert {r["steps"] for r in doc["grid"]} == {2, 3}
+        co = next(r for r in doc["grid"] if r["mode"] == "codist")
+        # no 2-step baseline exists for the 3-step codist run
+        assert co["gap_vs_allreduce"] is None
+
+    def test_aggregate_empty_dir(self, tmp_path):
+        doc = aggregate(str(tmp_path), "empty")
+        assert doc["n_cells"] == 0 and doc["grid"] == []
+        # a sweep that never ran (no directory) aggregates empty, not a crash
+        doc = aggregate(str(tmp_path / "never_ran"), "fresh")
+        assert doc["n_cells"] == 0 and doc["grid"] == []
+
+    def test_aggregate_filters_stale_cells(self, tmp_path):
+        d = str(tmp_path / "s")
+        _write_cell(d, "ar-s0", "allreduce", 2, "cos", "none", 1, 0, 1.0,
+                    [{"step": 0, "task_loss": 1.0, "comm_bytes": 10}])
+        # a leftover from a previous spec revision of the same name
+        _write_cell(d, "stale-s0", "codist", 9, "old", "gone", 2, 0, 9.0,
+                    [{"step": 0, "task_loss": 9.0, "comm_bytes": 1}])
+        unfiltered = aggregate(d, "s")
+        assert unfiltered["n_cells"] == 2
+        doc = aggregate(d, "s", cell_ids={"ar-s0"})
+        assert doc["n_cells"] == 1
+        assert [r["mode"] for r in doc["grid"]] == ["allreduce"]
+
+
+# ----------------------------------------------------------------------------
+# CI benchmark regression gate (tools/bench_compare.py)
+# ----------------------------------------------------------------------------
+
+def _bench_doc(rows):
+    return {"backend": "cpu", "quick": True, "rows": rows}
+
+
+def _run_compare(tmp_path, base_rows, new_rows, *extra):
+    bp, np_ = tmp_path / "base.json", tmp_path / "new.json"
+    bp.write_text(json.dumps(_bench_doc(base_rows)))
+    np_.write_text(json.dumps(_bench_doc(new_rows)))
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "bench_compare.py"),
+         "--baseline", str(bp), "--new", str(np_), *extra],
+        capture_output=True, text=True, cwd=REPO)
+
+
+BASE_ROWS = [
+    {"name": "throughput/strategy_prediction", "us_per_call": 100.0,
+     "derived": "comm_bytes=524288"},
+    {"name": "throughput/grad_ce_fused_vs_jnp", "us_per_call": 400.0,
+     "derived": "1.0x_ref"},
+]
+
+
+class TestBenchCompare:
+    def test_clean_run_passes(self, tmp_path):
+        r = _run_compare(tmp_path, BASE_ROWS, BASE_ROWS)
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "OK" in r.stdout
+
+    def test_doctored_throughput_regression_fails(self, tmp_path):
+        doctored = json.loads(json.dumps(BASE_ROWS))
+        doctored[0]["us_per_call"] = 200.0  # 2x slower > 25% tolerance
+        r = _run_compare(tmp_path, BASE_ROWS, doctored)
+        assert r.returncode == 1, r.stdout + r.stderr
+        assert "REGRESSED" in r.stdout and "2.00x" in r.stdout
+        # ...but a wide-enough tolerance waves the same rows through
+        r2 = _run_compare(tmp_path, BASE_ROWS, doctored, "--tolerance", "1.5")
+        assert r2.returncode == 0, r2.stdout + r2.stderr
+
+    def test_min_us_floor_skips_micro_rows(self, tmp_path):
+        doctored = json.loads(json.dumps(BASE_ROWS))
+        doctored[1]["us_per_call"] = 4000.0  # 10x slower, but a micro row
+        r = _run_compare(tmp_path, BASE_ROWS, doctored,
+                         "--min-us", "10000")
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "min-us" in r.stdout
+        # comm_bytes stays gated regardless of the floor
+        doctored[0]["derived"] = "comm_bytes=1"
+        r2 = _run_compare(tmp_path, BASE_ROWS, doctored,
+                          "--min-us", "10000")
+        assert r2.returncode == 1
+
+    def test_comm_bytes_change_fails_exactly(self, tmp_path):
+        doctored = json.loads(json.dumps(BASE_ROWS))
+        doctored[0]["derived"] = "comm_bytes=524290"  # tiny but nonzero
+        r = _run_compare(tmp_path, BASE_ROWS, doctored)
+        assert r.returncode == 1, r.stdout + r.stderr
+        assert "comm_bytes" in r.stdout
+
+    def test_comm_bytes_lost_on_one_side_fails(self, tmp_path):
+        # a crashed sweep cell emits '-' instead of comm_bytes=N: the row
+        # must regress, not fall through as "nothing to compare"
+        doctored = json.loads(json.dumps(BASE_ROWS))
+        doctored[0]["derived"] = "-"
+        doctored[0]["us_per_call"] = 0.0
+        r = _run_compare(tmp_path, BASE_ROWS, doctored)
+        assert r.returncode == 1, r.stdout + r.stderr
+        assert "missing on the new side" in r.stdout
+
+    def test_vanished_row_of_executed_benchmark_fails(self, tmp_path):
+        # the throughput benchmark ran (one row present) but a variant
+        # disappeared: its gates must not silently vacate
+        r = _run_compare(tmp_path, BASE_ROWS, BASE_ROWS[:1])
+        assert r.returncode == 1, r.stdout + r.stderr
+        assert "missing from the new run" in r.stdout
+        # ...whereas rows of a benchmark that did NOT run are not gated
+        fault_extra = BASE_ROWS + [{"name": "fault/loss", "us_per_call": 0.0,
+                                    "derived": "1.0"}]
+        r2 = _run_compare(tmp_path, fault_extra, BASE_ROWS)
+        assert r2.returncode == 0, r2.stdout + r2.stderr
+
+    def test_disjoint_rows_is_usage_error(self, tmp_path):
+        other = [{"name": "zzz/other", "us_per_call": 1.0, "derived": "x"}]
+        r = _run_compare(tmp_path, BASE_ROWS, other)
+        assert r.returncode == 2
+
+
+# ----------------------------------------------------------------------------
+# benchmarks.run --only validation (the registry bugfix)
+# ----------------------------------------------------------------------------
+
+def test_benchmarks_run_unknown_only_exits_2():
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only",
+         "definitely_not_a_benchmark"],
+        capture_output=True, text=True, cwd=REPO, env=_env(), timeout=120)
+    assert r.returncode == 2, r.stdout + r.stderr
+    assert "unknown benchmark" in r.stderr
+    assert "registered:" in r.stderr and "sweep_smoke" in r.stderr

@@ -1,0 +1,174 @@
+#!/usr/bin/env python3
+"""CI benchmark regression gate: diff a fresh benchmark run against the
+committed baseline.
+
+    python tools/bench_compare.py --baseline BENCH_throughput.json \\
+        --new bench_ci.json [--tolerance 0.25]
+
+Both files are ``benchmarks.run --json`` documents. Rows are matched by
+their ``name`` (``<benchmark>/<variant>``); only benchmarks present in
+the new run are gated, so a baseline regenerated from the full suite
+still gates a CI run of ``--only throughput`` — but within a benchmark
+the new run DID execute, every baseline row must reappear (a variant that
+stops being emitted, or is renamed, would otherwise vacate its gates
+silently). Per matched row:
+
+* **throughput** — ``us_per_call`` may grow by at most ``--tolerance``
+  (default 0.25 = 25%); rows timed at 0 on either side (skipped /
+  unmeasured, e.g. shardmap without enough devices) are not timing-gated,
+  and neither are rows whose BASELINE time is under ``--min-us``
+  (microsecond-scale interpret-mode kernel timings swing several-fold
+  run-to-run even on one machine — they are informational, not gateable);
+* **comm_bytes** — the ``comm_bytes=N`` field inside ``derived`` must
+  match EXACTLY: communication volume is deterministic accounting, and a
+  silent change is a correctness bug, not noise.
+
+Exit codes: 0 clean, 1 regression(s) (a readable table says which), 2
+usage error (missing/empty files, no comparable rows). To bless a new
+baseline after an intentional change, regenerate it and commit:
+
+    PYTHONPATH=src python -m benchmarks.run --only throughput,fault,sweep_smoke \\
+        --quick --json BENCH_throughput.json
+
+(see docs/experiments.md for when a re-bless is legitimate). This script
+is stdlib-only on purpose — it must run before any project deps install.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from typing import Dict, List, Optional
+
+COMM_RE = re.compile(r"comm_bytes=([0-9]+(?:\.[0-9]+)?)")
+
+
+def load_rows(path: str) -> Dict[str, Dict]:
+    """name -> {"us": float, "comm": float|None} from a --json document."""
+    with open(path) as f:
+        doc = json.load(f)
+    rows = {}
+    for r in doc.get("rows", []):
+        m = COMM_RE.search(str(r.get("derived", "")))
+        rows[r["name"]] = {
+            "us": float(r.get("us_per_call", 0.0)),
+            "comm": float(m.group(1)) if m else None,
+        }
+    return rows
+
+
+def compare(base: Dict[str, Dict], new: Dict[str, Dict],
+            tolerance: float, min_us: float = 0.0) -> List[Dict]:
+    """One result record per matched row, plus a REGRESSED record for
+    every baseline row of an executed benchmark that vanished from the
+    new run (matching on the ``<benchmark>/`` name prefix)."""
+    out = []
+    ran_prefixes = {n.split("/", 1)[0] for n in new}
+    for name in sorted(set(base) - set(new)):
+        if name.split("/", 1)[0] in ran_prefixes:
+            out.append({"name": name, "base_us": base[name]["us"],
+                        "new_us": 0.0, "base_comm": base[name]["comm"],
+                        "new_comm": None, "ratio": None,
+                        "status": "REGRESSED",
+                        "why": "row missing from the new run"})
+    for name in sorted(set(base) & set(new)):
+        b, n = base[name], new[name]
+        rec = {"name": name, "base_us": b["us"], "new_us": n["us"],
+               "base_comm": b["comm"], "new_comm": n["comm"],
+               "ratio": None, "status": "OK", "why": ""}
+        if (b["comm"] is None) != (n["comm"] is None):
+            # a row gaining or LOSING its comm accounting is a semantic
+            # change, not noise — e.g. a crashed sweep cell emitting '-'
+            # must not sail through as "nothing to compare"
+            rec["status"] = "REGRESSED"
+            side = "new" if n["comm"] is None else "baseline"
+            rec["why"] = f"comm_bytes missing on the {side} side"
+        elif b["comm"] is not None and b["comm"] != n["comm"]:
+            rec["status"] = "REGRESSED"
+            rec["why"] = (f"comm_bytes {b['comm']:.0f} -> {n['comm']:.0f} "
+                          "(must match exactly)")
+        if b["us"] > 0 and n["us"] > 0:
+            rec["ratio"] = n["us"] / b["us"]
+            if rec["status"] == "OK" and b["us"] < min_us:
+                rec["status"] = "SKIP"
+                rec["why"] = f"baseline under --min-us {min_us:.0f}"
+            elif rec["status"] == "OK" and rec["ratio"] > 1.0 + tolerance:
+                rec["status"] = "REGRESSED"
+                rec["why"] = (f"{rec['ratio']:.2f}x slower "
+                              f"(tolerance {1.0 + tolerance:.2f}x)")
+        elif rec["status"] == "OK":
+            rec["status"] = "SKIP"
+            rec["why"] = "unmeasured timing on one side"
+        out.append(rec)
+    return sorted(out, key=lambda r: r["name"])
+
+
+def render(records: List[Dict]) -> str:
+    headers = ("row", "base us", "new us", "ratio", "comm", "status")
+    lines = []
+    for r in records:
+        comm = ("-" if r["base_comm"] is None
+                else ("=" if r["base_comm"] == r["new_comm"] else "DIFF"))
+        lines.append((r["name"], f"{r['base_us']:.1f}", f"{r['new_us']:.1f}",
+                      "-" if r["ratio"] is None else f"{r['ratio']:.2f}x",
+                      comm,
+                      r["status"] + (f"  {r['why']}" if r["why"] else "")))
+    widths = [max(len(h), *(len(l[i]) for l in lines)) if lines else len(h)
+              for i, h in enumerate(headers)]
+    fmt = "  ".join(f"{{:<{w}}}" for w in widths)
+    return "\n".join([fmt.format(*headers),
+                      fmt.format(*("-" * w for w in widths))]
+                     + [fmt.format(*l) for l in lines])
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Gate CI benchmark results against the committed "
+                    "baseline (see module docstring).")
+    ap.add_argument("--baseline", default="BENCH_throughput.json")
+    ap.add_argument("--new", default="bench_ci.json")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional us_per_call growth "
+                         "(default 0.25 = 25%%)")
+    ap.add_argument("--min-us", type=float, default=0.0,
+                    help="skip the timing gate for rows whose baseline "
+                         "us_per_call is below this (noise floor)")
+    args = ap.parse_args(argv)
+
+    try:
+        base = load_rows(args.baseline)
+        new = load_rows(args.new)
+    except (OSError, json.JSONDecodeError, KeyError, ValueError) as e:
+        print(f"bench_compare: cannot load inputs: {e}", file=sys.stderr)
+        return 2
+    records = compare(base, new, args.tolerance, args.min_us)
+    if not records:
+        print("bench_compare: no comparable rows between "
+              f"{args.baseline} ({len(base)} rows) and "
+              f"{args.new} ({len(new)} rows)", file=sys.stderr)
+        return 2
+
+    print(render(records))
+    regressed = [r for r in records if r["status"] == "REGRESSED"]
+    missing = sorted(set(new) - set(base))
+    if missing:
+        print(f"\nnote: {len(missing)} new row(s) not in the baseline "
+              f"(not gated): {', '.join(missing[:8])}"
+              + ("..." if len(missing) > 8 else ""))
+    if regressed:
+        print(f"\nFAIL: {len(regressed)}/{len(records)} row(s) regressed "
+              f"(tolerance {args.tolerance:.0%} on timing, exact on "
+              "comm_bytes).")
+        print("If the change is intentional, bless a new baseline:\n"
+              "    PYTHONPATH=src python -m benchmarks.run "
+              "--only throughput,fault,sweep_smoke --quick "
+              "--json BENCH_throughput.json")
+        return 1
+    print(f"\nOK: {len(records)} row(s) within tolerance "
+          f"({args.tolerance:.0%} timing, exact comm_bytes).")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,7 +13,7 @@ import jax
 from repro.configs import CodistConfig, TrainConfig
 from repro.data import make_lm_batch
 from repro.train import stack_batches, train_codist
-from repro.train.steps import make_codist_eval_step
+from repro.train import make_codist_eval_step
 
 from benchmarks.common import coord_batches, lm_setup, timed
 

@@ -28,7 +28,7 @@ from repro.configs import CodistConfig, TrainConfig
 from repro.data.multiview import MultiViewTask, multiview_batch
 from repro.models.mlp import MLP, MLPConfig
 from repro.train import stack_batches, train_codist
-from repro.train.steps import make_codist_eval_step
+from repro.train import make_codist_eval_step
 
 from benchmarks.common import timed
 

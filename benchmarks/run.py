@@ -5,7 +5,7 @@
 
 Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally writes
 the rows as a JSON document (the committed ``BENCH_throughput.json`` perf
-trajectory is ``--only throughput,fault,sweep_smoke --quick --json
+trajectory is ``--only throughput,fault,sweep_smoke,serving --quick --json
 BENCH_throughput.json``; ``tools/bench_compare.py`` gates CI runs against
 it — see docs/experiments.md). Unknown ``--only`` names exit 2 with the
 registered list.
@@ -19,6 +19,7 @@ Mapping to the paper:
     fig17       n-way with a fixed total update budget degrades
     fault       codist vs all-reduce barrier under seeded fault injection
     sweep_smoke paper-grid sweep harness end-to-end (run/resume/aggregate)
+    serving     continuous-batching fleet: latency/SLO per workload scenario
     throughput  step-variant microbench + kernel interpret timings
     roofline    §Roofline summary from the dry-run artifacts
 """
@@ -45,6 +46,7 @@ REGISTRY = {
     "staleness": "benchmarks.staleness",
     "fault": "benchmarks.fault_tolerance",
     "sweep_smoke": "benchmarks.sweep_smoke",
+    "serving": "benchmarks.serving",
     "comm": "benchmarks.comm_sweep",
     "throughput": "benchmarks.throughput",
     "roofline": "benchmarks.roofline_table",

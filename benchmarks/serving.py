@@ -1,0 +1,64 @@
+"""Serving-fleet benchmark: p50/p99 latency, tokens/sec and SLO attainment
+per workload scenario, through the full continuous-batching stack (paged KV
+pool, admission control, peer router).
+
+One row per (scenario, router) cell on a tiny LM. ``us_per_call`` is WALL
+time per generated token (informational on CPU interpret mode — gated only
+through the wide ``--min-us`` floor); everything in ``derived`` is computed
+on the SIMULATED clock and is bit-deterministic for the committed seed:
+``comm_bytes`` (KV-pool bytes written + router weight-refresh bytes — the
+serving side's deterministic traffic accounting) is matched EXACTLY by
+``tools/bench_compare.py``, so a scheduling / allocation / workload change
+that silently alters fleet behavior fails CI the same way a train-side
+comm change does.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+
+from repro.serve.fleet import FleetConfig, FleetRouter, generate_workload
+
+from benchmarks.common import tiny_lm_cfg
+
+SEED = 17
+CELLS = [
+    # (scenario, router policy, peers)
+    ("steady", "round_robin", 2),
+    ("bursty", "least_loaded", 2),
+    ("diurnal", "ensemble", 2),
+]
+
+
+def run(quick: bool = False) -> List[Dict]:
+    from repro.models import build_model
+    cfg = tiny_lm_cfg()
+    model = build_model(cfg)
+    peer_params = [model.init(jax.random.key(SEED + i)) for i in range(2)]
+    n_requests = 12 if quick else 48
+    rows: List[Dict] = []
+    for scenario, policy, peers in CELLS:
+        wl = generate_workload(scenario, n_requests, cfg.padded_vocab,
+                               seed=SEED, max_prompt=16, max_new=6)
+        fc = FleetConfig(max_slots=4, block_size=4, num_blocks=64,
+                         max_blocks_per_slot=8)
+        router = FleetRouter(model, peer_params[:peers], config=fc,
+                             policy=policy, canary_every=4)
+        t0 = time.perf_counter()
+        rep = router.run(wl, slo_ms=50.0)
+        wall_s = time.perf_counter() - t0
+        us_per_tok = wall_s * 1e6 / max(1, rep.generated_tokens)
+        comm = rep.kv_bytes_written + rep.refresh_bytes
+        rows.append({
+            "name": f"serving/{scenario}_{policy}",
+            "us_per_call": us_per_tok,
+            "derived": (f"p99_ttft_ms={rep.p99_ttft_ms:.3f},"
+                        f"slo={rep.slo_attainment:.3f},"
+                        f"sim_tok_s={rep.sim_tokens_per_s:.1f},"
+                        f"completed={rep.completed},"
+                        f"digest={rep.stream_digest[:12]},"
+                        f"comm_bytes={comm}"),
+        })
+    return rows

@@ -20,7 +20,7 @@ from repro.core.codistillation import cross_entropy, distill_mse
 from repro.data import MarkovLM, make_lm_batch
 from repro.models import build_model
 from repro.optim import make_optimizer
-from repro.train.steps import make_schedules
+from repro.train import make_schedules
 
 STEPS, B, S, VOCAB, POOL = 400, 8, 64, 64, 6
 

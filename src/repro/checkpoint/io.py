@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import numpy as np
@@ -22,13 +22,25 @@ def _flatten(tree: PyTree):
     return leaves, treedef
 
 
-def save_pytree(path: str, tree: PyTree) -> None:
+def save_pytree(path: str, tree: PyTree, meta: Optional[dict] = None) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     leaves, treedef = _flatten(tree)
     np.savez(path + ".npz", **{f"leaf_{i}": np.asarray(x)
                                for i, x in enumerate(leaves)})
+    doc = {"treedef": str(treedef), "n_leaves": len(leaves)}
+    if meta:
+        doc["meta"] = meta
     with open(path + ".tree.json", "w") as f:
-        json.dump({"treedef": str(treedef), "n_leaves": len(leaves)}, f)
+        json.dump(doc, f)
+
+
+def read_meta(path: str) -> Optional[dict]:
+    """The ``meta`` dict saved alongside a pytree (None if absent)."""
+    try:
+        with open(path + ".tree.json") as f:
+            return json.load(f).get("meta")
+    except (OSError, json.JSONDecodeError):
+        return None
 
 
 def snapshot_path(directory: str, peer: int) -> str:
@@ -36,14 +48,43 @@ def snapshot_path(directory: str, peer: int) -> str:
     return os.path.join(directory, f"peer{peer}")
 
 
-def save_snapshot(directory: str, peer: int, state: PyTree) -> None:
+def save_snapshot(directory: str, peer: int, state: PyTree,
+                  meta: Optional[dict] = None) -> None:
     """Overwrite peer's latest snapshot (the async runtime's recovery point:
-    a failed peer rejoins from here instead of a fresh init)."""
-    save_pytree(snapshot_path(directory, peer), state)
+    a failed peer rejoins from here instead of a fresh init). ``meta``
+    (e.g. ``{"step": n}``) lets consumers — the serving fleet's weight
+    refresh — order snapshots without loading payloads."""
+    save_pytree(snapshot_path(directory, peer), state, meta)
+
+
+def snapshot_meta(directory: str, peer: int) -> Optional[dict]:
+    return read_meta(snapshot_path(directory, peer))
 
 
 def has_snapshot(directory: str, peer: int) -> bool:
     return os.path.exists(snapshot_path(directory, peer) + ".npz")
+
+
+def load_snapshot_params(directory: str, peer: int,
+                         params_like: PyTree) -> PyTree:
+    """Restore ONLY the params of a saved peer state.
+
+    ``TrainState``/``CodistState`` are NamedTuples with ``params`` first, so
+    the params leaves are the LEADING leaves of the flattened snapshot —
+    serving-side consumers restore them against a params-only template
+    without knowing the optimizer state's structure.
+    """
+    data = np.load(snapshot_path(directory, peer) + ".npz")
+    like_leaves, treedef = _flatten(params_like)
+    assert len(data.files) >= len(like_leaves), \
+        (len(data.files), len(like_leaves), "snapshot smaller than params")
+    import jax.numpy as jnp
+    restored = [jnp.asarray(data[f"leaf_{i}"], dtype=l.dtype)
+                for i, l in enumerate(like_leaves)]
+    for got, want in zip(restored, like_leaves):
+        assert got.shape == want.shape, \
+            (got.shape, want.shape, "snapshot params/template mismatch")
+    return jax.tree_util.tree_unflatten(treedef, restored)
 
 
 def load_snapshot(directory: str, peer: int, like: PyTree) -> PyTree:

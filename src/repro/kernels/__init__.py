@@ -7,6 +7,8 @@
   combined_loss   — COMBINED CE + distill: one read of each logits tile per
                     model, both losses and both gradients
   flash_attention — online-softmax GQA attention (causal / sliding window)
+  paged_cache     — serving-fleet paged KV pool gather/scatter (scalar-
+                    prefetched block tables; decode reads only live blocks)
 
 Each has a pure-jnp oracle in ``ref.py`` and a jit'd public wrapper in
 ``ops.py`` (auto interpret on CPU, Mosaic on TPU). The differentiable
@@ -25,4 +27,10 @@ from repro.kernels.ops import (  # noqa: F401
     fused_cross_entropy_loss,
     fused_distill_mean,
     fused_losses_default,
+)
+from repro.kernels.paged_cache import (  # noqa: F401
+    paged_gather,
+    paged_gather_ref,
+    paged_scatter,
+    paged_scatter_ref,
 )

@@ -1,0 +1,146 @@
+"""Paged KV-cache gather/scatter Pallas kernels for the serving fleet.
+
+The continuous batcher (``repro.serve.fleet``) stores decode-time KV in a
+shared block pool ``(num_blocks, block_size, KV, hd)`` instead of one dense
+``(B, cap, ...)`` buffer per call: a request owns ``ceil(ctx/block_size)``
+blocks named by a per-slot block table, so HBM holds only live context and
+slots of wildly different lengths share one allocation. Block 0 is the
+reserved NULL block — never allocated, all-zero — and every dead table entry
+points at it, which keeps the BlockSpec index maps total.
+
+Two kernels move data between the pool and the decode step:
+
+  ``paged_gather``   (pool, table, n_live) -> (S, MB*BS, KV, hd)
+      grid (S, MB); program (s, m) DMAs pool block ``table[s, m]`` into the
+      slot's contiguous view, zeroing blocks past ``n_live[s]`` — decode
+      reads only live blocks (dead entries all alias the one null block).
+  ``paged_scatter``  (pool, new, write_slot, write_off) -> pool
+      grid (num_blocks,); the inverse block->writer map (computed host-side
+      by the allocator: ``write_slot[b]`` = slot appending into block b this
+      step, -1 = untouched) makes every output block written exactly once,
+      so the update needs no atomics and no partially-covered outputs.
+
+Both use ``PrefetchScalarGridSpec``: the table / write maps are scalar-
+prefetched so the index maps can compute DMA sources before the body runs.
+Interpret mode on CPU, Mosaic on TPU (``auto_interpret``), with jnp oracles
+(``*_ref``) pinned against the kernels in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ----------------------------------------------------------------------------
+# gather: pool blocks -> per-slot contiguous KV
+# ----------------------------------------------------------------------------
+
+def _gather_kernel(table_ref, nlive_ref, pool_ref, out_ref):
+    s, m = pl.program_id(0), pl.program_id(1)
+    live = m < nlive_ref[s]
+    blk = pool_ref[0]
+    out_ref[0, 0] = jnp.where(live, blk, jnp.zeros_like(blk))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_gather(pool: jax.Array, table: jax.Array, n_live: jax.Array,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """pool (NB, BS, KV, hd); table (S, MB) int32; n_live (S,) int32 live
+    blocks per slot. Returns (S, MB*BS, KV, hd): slot s's context at
+    positions [0, n_live[s]*BS), zeros beyond."""
+    if interpret is None:
+        from repro.kernels.ops import auto_interpret
+        interpret = auto_interpret()
+    nb, bs, kv, hd = pool.shape
+    s, mb = table.shape
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(s, mb),
+            in_specs=[pl.BlockSpec((1, bs, kv, hd),
+                                   lambda si, mi, t, nl: (t[si, mi], 0, 0, 0))],
+            out_specs=pl.BlockSpec((1, 1, bs, kv, hd),
+                                   lambda si, mi, t, nl: (si, mi, 0, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((s, mb, bs, kv, hd), pool.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), n_live.astype(jnp.int32), pool)
+    return out.reshape(s, mb * bs, kv, hd)
+
+
+def paged_gather_ref(pool: jax.Array, table: jax.Array,
+                     n_live: jax.Array) -> jax.Array:
+    """jnp oracle for ``paged_gather``."""
+    s, mb = table.shape
+    _, bs, kv, hd = pool.shape
+    g = pool[table]                                     # (S, MB, BS, KV, hd)
+    live = jnp.arange(mb)[None, :] < n_live[:, None]    # (S, MB)
+    g = jnp.where(live[..., None, None, None], g, 0.0)
+    return g.reshape(s, mb * bs, kv, hd)
+
+
+# ----------------------------------------------------------------------------
+# scatter: one new KV row per appending slot -> its (block, offset)
+# ----------------------------------------------------------------------------
+
+def _scatter_kernel(wslot_ref, woff_ref, new_ref, pool_ref, out_ref, *,
+                    block_size: int):
+    b = pl.program_id(0)
+    w = wslot_ref[b]
+    off = woff_ref[b]
+    src = pl.load(new_ref, (pl.dslice(jnp.maximum(w, 0), 1),
+                            slice(None), slice(None)))      # (1, KV, hd)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block_size, 1, 1), 0)
+    mask = (rows == off) & (w >= 0)
+    out_ref[0] = jnp.where(mask, src, pool_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_scatter(pool: jax.Array, new: jax.Array, write_slot: jax.Array,
+                  write_off: jax.Array,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Append one KV row per active slot into its owned block.
+
+    pool (NB, BS, KV, hd); new (S, KV, hd); write_slot (NB,) int32 = the
+    slot appending into block b this step (-1: block untouched); write_off
+    (NB,) int32 = row within the block. The block->writer inversion is the
+    allocator's (slots own disjoint blocks, so at most one writer per block)
+    and makes each output block written exactly once.
+    """
+    if interpret is None:
+        from repro.kernels.ops import auto_interpret
+        interpret = auto_interpret()
+    nb, bs, kv, hd = pool.shape
+    s = new.shape[0]
+    return pl.pallas_call(
+        functools.partial(_scatter_kernel, block_size=bs),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(nb,),
+            in_specs=[
+                pl.BlockSpec((s, kv, hd), lambda b, ws, wo: (0, 0, 0)),
+                pl.BlockSpec((1, bs, kv, hd), lambda b, ws, wo: (b, 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bs, kv, hd),
+                                   lambda b, ws, wo: (b, 0, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        interpret=interpret,
+    )(write_slot.astype(jnp.int32), write_off.astype(jnp.int32),
+      new.astype(pool.dtype), pool)
+
+
+def paged_scatter_ref(pool: jax.Array, new: jax.Array, write_slot: jax.Array,
+                      write_off: jax.Array) -> jax.Array:
+    """jnp oracle for ``paged_scatter``."""
+    nb, bs, _, _ = pool.shape
+    rows = jnp.arange(bs)[None, :]
+    mask = (write_slot >= 0)[:, None] & (rows == write_off[:, None])  # (NB,BS)
+    src = new.astype(pool.dtype)[jnp.clip(write_slot, 0)]             # (NB,KV,hd)
+    return jnp.where(mask[..., None, None], src[:, None], pool)

@@ -37,7 +37,8 @@ from repro.launch.roofline import build_report  # noqa: E402
 from repro.models import build_model  # noqa: E402
 from repro.models import sharding_hints as hints  # noqa: E402
 from repro.optim import make_optimizer  # noqa: E402
-from repro.train import steps as steps_mod  # noqa: E402
+from repro.train.engine import (AllReduce, PredictionExchange,  # noqa: E402
+                                build_train_step)
 from repro.train.state import CodistState, TrainState  # noqa: E402
 
 SDS = jax.ShapeDtypeStruct
@@ -102,7 +103,7 @@ def _train_lowering(model, cfg, shape, mesh, mode: str, codist_n: int,
         tc = TrainConfig(optimizer="sgdm", remat=remat, total_steps=1000,
                          microbatch=k, opt_dtype="bfloat16",
                          accum_dtype="bfloat16")
-        step = steps_mod.make_allreduce_step(model, tc)
+        step = build_train_step(model, tc, None, AllReduce()).variants["on"]
         params_sds = sp.params_specs(model)
         opt_init, _ = make_optimizer("sgdm", dtype="bfloat16")
         opt_sds = jax.eval_shape(opt_init, params_sds)
@@ -116,7 +117,8 @@ def _train_lowering(model, cfg, shape, mesh, mode: str, codist_n: int,
                          accum_dtype="bfloat16")
         codist = CodistConfig(n_models=codist_n, mode="predictions",
                               **(extra or {}))
-        step = steps_mod.make_codist_step(model, codist, tc, distill=True)
+        step = build_train_step(model, tc, codist,
+                                PredictionExchange(codist)).variants["on"]
         params_sds = sp.stacked_params_specs(model, codist_n)
         opt_init, _ = make_optimizer("sgdm", dtype="bfloat16")
         opt_sds = jax.eval_shape(opt_init, params_sds)

@@ -1,7 +1,16 @@
-"""Serving launcher: prefill + batched decode with a (reduced) model.
+"""Serving launcher: the continuous-batching fleet over codistilled peers.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b \
-        --batch 4 --prompt-len 64 --max-new 32
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b \
+        --peers 2 --scenario bursty --requests 32 --slo-ms 50 \
+        --router least_loaded
+
+Runs a seeded open-loop workload (see ``repro.serve.fleet.workload``'s
+scenario catalog) through N peer engines and prints the SLO report
+(simulated-time latencies: bit-deterministic for a given seed). ``--report``
+writes the full JSON report; ``--snapshot-dir`` points the router's
+staleness-bounded weight refresh at ``checkpoint/io.py`` peer snapshots
+(e.g. from ``--mode codist-async --checkpoint-every``). The legacy
+single-engine batched-generate path lives behind ``--single``.
 """
 from __future__ import annotations
 
@@ -13,25 +22,113 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, get_reduced, list_archs
 from repro.models import build_model
-from repro.serve import Engine
+from repro.serve import Engine, resolve_cache_dtype
+from repro.serve.fleet import (POLICIES, SCENARIOS, FleetConfig, FleetRouter,
+                               generate_workload)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b", choices=list_archs())
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--max-new", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cache-dtype", default="auto",
+                    help="KV/state cache dtype: auto (bf16 on TPU, fp32 in "
+                         "interpret mode), bf16, fp16, fp32")
+    ap.add_argument("--max-new", type=int, default=16)
+    # ---- fleet mode ----
+    ap.add_argument("--peers", type=int, default=2,
+                    help="codistilled replicas behind the router")
+    ap.add_argument("--scenario", default="steady", choices=list(SCENARIOS))
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--slo-ms", type=float, default=50.0,
+                    help="TTFT SLO (simulated ms)")
+    ap.add_argument("--router", default="round_robin", choices=list(POLICIES))
+    ap.add_argument("--canary-every", type=int, default=0,
+                    help="duplicate every k-th request to the next peer and "
+                         "track distill_pair divergence (0: off)")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="decode slots per peer")
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--num-blocks", type=int, default=128)
+    ap.add_argument("--max-prompt", type=int, default=48)
+    ap.add_argument("--snapshot-dir", default="",
+                    help="poll checkpoint/io.py peer snapshots for "
+                         "staleness-bounded weight refresh")
+    ap.add_argument("--refresh-every-ms", type=float, default=0.0)
+    ap.add_argument("--staleness-bound", type=int, default=0)
+    ap.add_argument("--report", default="", help="write the JSON report here")
+    # ---- legacy single-engine mode ----
+    ap.add_argument("--single", action="store_true",
+                    help="legacy path: one Engine.generate batch, no fleet")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)
-    params = model.init(jax.random.key(args.seed))
-    engine = Engine(model, params)
+    cache_dtype = resolve_cache_dtype(args.cache_dtype)
 
+    if args.single:
+        return _single(args, cfg, model, cache_dtype)
+    if cfg.is_encdec or cfg.num_patches or not hasattr(model, "decode"):
+        import sys
+        print(f"--arch {args.arch} is not token-only LM serving "
+              "(enc-dec / VLM / vision): the fleet's workload generator "
+              "drives text prompts only — use --single for the legacy "
+              "batched-generate path", file=sys.stderr)
+        sys.exit(2)
+
+    peer_params = [model.init(jax.random.key(args.seed + i))
+                   for i in range(args.peers)]
+    fc = FleetConfig(max_slots=args.slots, block_size=args.block_size,
+                     num_blocks=args.num_blocks,
+                     max_blocks_per_slot=max(
+                         1, -(-(args.max_prompt + args.max_new)
+                              // args.block_size)))
+    router = FleetRouter(model, peer_params, config=fc, policy=args.router,
+                         cache_dtype=cache_dtype,
+                         canary_every=args.canary_every,
+                         snapshot_dir=args.snapshot_dir or None,
+                         refresh_every_ms=args.refresh_every_ms,
+                         staleness_bound=args.staleness_bound)
+    if args.snapshot_dir:
+        n = router.refresh_now()
+        print(f"initial weight refresh: {n}/{args.peers} peers from "
+              f"{args.snapshot_dir}")
+    wl = generate_workload(args.scenario, args.requests, cfg.padded_vocab,
+                           seed=args.seed, max_prompt=args.max_prompt,
+                           max_new=args.max_new)
+    t0 = time.time()
+    rep = router.run(wl, slo_ms=args.slo_ms)
+    wall = time.time() - t0
+    print(f"arch={args.arch} scenario={args.scenario} router={args.router} "
+          f"peers={args.peers} requests={args.requests} seed={args.seed}")
+    print(f"completed={rep.completed} rejected={rep.rejected} "
+          f"generated_tokens={rep.generated_tokens}")
+    print(f"TTFT p50/p99 = {rep.p50_ttft_ms:.1f}/{rep.p99_ttft_ms:.1f} ms "
+          f"(sim)  e2e p50/p99 = {rep.p50_e2e_ms:.1f}/{rep.p99_e2e_ms:.1f} ms")
+    print(f"SLO({rep.slo_ms:.0f}ms TTFT) attainment = "
+          f"{rep.slo_attainment:.3f}  sim tok/s = {rep.sim_tokens_per_s:.1f}"
+          f"  wall tok/s = {rep.generated_tokens / max(wall, 1e-9):.1f}")
+    print(f"pool peak util = {rep.peak_pool_utilization:.2f}  "
+          f"kv_bytes = {rep.kv_bytes_written}  refreshes = {rep.refreshes} "
+          f"(dropped stale: {rep.refreshes_dropped_stale})")
+    if rep.canary.get("count"):
+        print(f"canary: n={rep.canary['count']} "
+              f"mean_mse={rep.canary['mean_mse']:.4f} "
+              f"token_agreement={rep.canary['token_agreement']:.3f}")
+    print(f"stream digest = {rep.stream_digest}")
+    if args.report:
+        with open(args.report, "w") as f:
+            f.write(rep.to_json() + "\n")
+        print(f"wrote {args.report}")
+
+
+def _single(args, cfg, model, cache_dtype) -> None:
+    params = model.init(jax.random.key(args.seed))
+    engine = Engine(model, params, cache_dtype=cache_dtype)
     key = jax.random.key(args.seed + 1)
     batch = {"tokens": jax.random.randint(
         key, (args.batch, args.prompt_len), 0, cfg.padded_vocab)}
@@ -41,7 +138,6 @@ def main() -> None:
     if cfg.is_encdec:
         batch["frames"] = 0.1 * jax.random.normal(
             key, (args.batch, cfg.num_audio_frames, cfg.d_model))
-
     t0 = time.time()
     result = engine.generate(batch, args.max_new, args.temperature, args.seed)
     dt = time.time() - t0

@@ -165,34 +165,47 @@ def prefill_into_cache(cache: Dict[str, jax.Array],
 def attention_decode(p: Dict[str, jax.Array], x: jax.Array,
                      cache: Dict[str, jax.Array], pos: jax.Array,
                      cfg: ModelConfig):
-    """One-token decode. x: (B,1,d); pos: () int32 absolute position.
+    """One-token decode. x: (B,1,d); pos: () int32 absolute position, or a
+    (B,) int32 vector of PER-ROW positions (ragged continuous batching: each
+    cache row advances on its own clock; full-length caches only).
 
     Returns (out (B,1,d), new_cache). With a windowed cache the write index is
     pos % window (ring buffer) and reads mask out unwritten / evicted slots.
     """
     b = x.shape[0]
     cap = cache["k"].shape[1]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    vector_pos = pos.ndim == 1
+    positions = pos[:, None] if vector_pos else jnp.full((b, 1), pos, jnp.int32)
     q, k_new, v_new = _project_qkv(p, x, cfg)
     q = apply_rope(q, positions, cfg.rope_theta)
     k_new = apply_rope(k_new, positions, cfg.rope_theta)
 
-    write_idx = (pos % cap) if cfg.sliding_window > 0 else pos
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                     (0, write_idx, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                     (0, write_idx, 0, 0))
+    slot = jnp.arange(cap)
+    if vector_pos:
+        assert cfg.sliding_window <= 0, \
+            "per-row positions require a full-length (non-ring) cache"
+        rows = jnp.arange(b)
+        k = cache["k"].at[rows, pos].set(k_new[:, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[rows, pos].set(v_new[:, 0].astype(cache["v"].dtype))
+        valid = (slot[None, :] <= pos[:, None])[:, None, None, :]  # (B,1,1,cap)
+    else:
+        write_idx = (pos % cap) if cfg.sliding_window > 0 else pos
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, write_idx, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, write_idx, 0, 0))
+        if cfg.sliding_window > 0:
+            # slot holds absolute position: the largest written pos congruent mod cap
+            age = (write_idx - slot) % cap           # 0 == just written
+            abs_pos = pos - age
+            valid = (abs_pos >= 0) & (age < jnp.minimum(cap, pos + 1))
+        else:
+            valid = slot <= pos
+        valid = valid[None, None, None, :]
 
     scores = _gqa_scores(q, k)  # (B,H,1,cap)
-    slot = jnp.arange(cap)
-    if cfg.sliding_window > 0:
-        # slot holds absolute position: the largest written pos congruent mod cap
-        age = (write_idx - slot) % cap           # 0 == just written
-        abs_pos = pos - age
-        valid = (abs_pos >= 0) & (age < jnp.minimum(cap, pos + 1))
-    else:
-        valid = slot <= pos
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    scores = jnp.where(valid, scores, NEG_INF)
     w = _softmax(scores).astype(x.dtype)
     out = _out_proj(p, _gqa_combine(w, v))
     return out, {"k": k, "v": v}

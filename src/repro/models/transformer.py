@@ -298,7 +298,9 @@ class LM:
 
     def decode(self, params: PyTree, cache: PyTree, tokens: jax.Array,
                pos: jax.Array) -> Tuple[jax.Array, PyTree]:
-        """tokens: (B,1) int32; pos: () int32 absolute position."""
+        """tokens: (B,1) int32; pos: () int32 absolute position, or (B,)
+        int32 per-row positions (ragged decode — state-based mixers ignore
+        it, attention scatters per row; see ``attention_decode``)."""
         cfg = self.cfg
         kinds = _sub_kinds(cfg)
         dtype = cfg.activation_dtype

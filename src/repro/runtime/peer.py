@@ -47,7 +47,10 @@ class PeerRuntime:
 
     # ---- checkpoint-based recovery -----------------------------------------
     def snapshot(self, directory: str) -> None:
-        save_snapshot(directory, self.pid, self.state)
+        # step metadata lets snapshot consumers (the serving fleet's
+        # keep-last weight refresh) order snapshots without loading payloads
+        save_snapshot(directory, self.pid, self.state,
+                      meta={"step": self.step})
 
     def can_recover(self, directory: Optional[str]) -> bool:
         return directory is not None and has_snapshot(directory, self.pid)

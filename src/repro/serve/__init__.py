@@ -1,1 +1,2 @@
-from repro.serve.engine import Engine, GenerationResult  # noqa: F401
+from repro.serve.engine import (Engine, GenerationResult,  # noqa: F401
+                                default_cache_dtype, resolve_cache_dtype)

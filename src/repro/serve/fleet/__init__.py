@@ -1,0 +1,24 @@
+"""Continuous-batching serving fleet over codistilled peers.
+
+The deployment half of the codistillation story: training (PRs 1-4) yields N
+independently-steppable replicas; this package serves them. See
+docs/serving.md for the architecture and the scenario catalog.
+
+    workload.py   seeded open-loop request generator (Poisson / bursty /
+                  diurnal arrival curves, mixed length distributions)
+    batcher.py    per-peer continuous batcher: join/evict into fixed decode
+                  slots, admission control, simulated-time SLO accounting
+    cache.py      slot-paged KV pool (block allocate / free / defrag)
+    model_exec.py compile-once batched decode over the paged pool
+                  (``repro.kernels.paged_cache`` gather/scatter)
+    router.py     peer routing (round-robin / least-loaded / ensemble),
+                  canary divergence via ``distill_pair``, staleness-bounded
+                  keep-last weight refresh from checkpoint snapshots
+"""
+from repro.serve.fleet.batcher import (FleetConfig, FleetEngine,  # noqa: F401
+                                       RequestRecord)
+from repro.serve.fleet.cache import PagedCachePool  # noqa: F401
+from repro.serve.fleet.router import (FleetReport, FleetRouter,  # noqa: F401
+                                      POLICIES)
+from repro.serve.fleet.workload import (SCENARIOS, Request,  # noqa: F401
+                                        Workload, generate_workload)

@@ -1,0 +1,300 @@
+"""Continuous-batching scheduler: per-step join/evict of ragged requests
+into fixed decode slots over the paged KV pool.
+
+One ``FleetEngine`` serves one codistilled peer. Every engine tick:
+
+  1. requests whose (simulated) arrival time has passed move into the
+     bounded waiting queue (admission control: overflow is REJECTED, load
+     shedding at the edge rather than unbounded latency);
+  2. up to ``max_prefills_per_step`` waiting requests are admitted into free
+     decode slots — reservation-on-admit: the full worst-case context
+     (prompt + max output) is block-reserved up front so an admitted request
+     can never deadlock mid-decode. Each admission runs an exact-length
+     single-request prefill (identical to ``Engine.generate``'s — the parity
+     anchor) whose KV scatters into the slot's blocks and whose last-token
+     argmax is the request's first generated token;
+  3. one batched decode step advances EVERY live slot through the paged
+     pool (prefill/decode interleaving: joins at step t decode in step t);
+  4. finished requests evict, freeing their blocks for the next tick.
+
+Time is simulated (a deterministic per-step cost model), so latency/SLO
+reports are bit-reproducible across machines — wall-clock throughput is
+measured separately by ``benchmarks/serving.py``. Greedy decoding only: the
+fleet's testable invariant is temperature-0 token-identity with the dense
+engine.
+"""
+from __future__ import annotations
+
+import weakref
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.fleet.cache import PagedCachePool
+from repro.serve.fleet.model_exec import build_decode_step
+from repro.serve.fleet.workload import Request
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class FleetConfig:
+    max_slots: int = 8
+    block_size: int = 8
+    num_blocks: int = 128            # incl. the reserved null block
+    max_blocks_per_slot: int = 16
+    max_queue: int = 256             # admission control: beyond this, shed
+    max_prefills_per_step: int = 2   # prefill/decode interleaving knob
+    defrag_every: int = 0            # engine steps; 0 = never
+    # deterministic simulated cost model (ms)
+    prefill_ms_per_token: float = 0.2
+    decode_ms_per_step: float = 1.5
+    step_overhead_ms: float = 0.3
+
+
+@dataclass
+class RequestRecord:
+    """Per-request lifecycle + output stream (the determinism surface)."""
+    request: Request
+    canary: bool = False
+    admitted_ms: Optional[float] = None
+    first_token_ms: Optional[float] = None
+    finished_ms: Optional[float] = None
+    rejected: bool = False
+    tokens: List[int] = field(default_factory=list)
+    prefill_logits: Optional[np.ndarray] = None   # kept for canary compares
+
+    @property
+    def ttft_ms(self) -> Optional[float]:
+        if self.first_token_ms is None:
+            return None
+        return self.first_token_ms - self.request.arrival_ms
+
+    @property
+    def e2e_ms(self) -> Optional[float]:
+        if self.finished_ms is None:
+            return None
+        return self.finished_ms - self.request.arrival_ms
+
+
+@dataclass
+class _Slot:
+    record: RequestRecord
+    remaining: int
+    next_token: int                  # decode input (last generated token)
+
+
+# compiled decode/prefill shared across engines: N peers of one fleet serve
+# the SAME model object (params are call arguments), so compiling per engine
+# would duplicate the decode program and every distinct prompt-length
+# prefill trace N times. Weak-keyed on the model so entries (and their jit
+# traces) die with the fleet instead of accumulating for process lifetime.
+_EXEC_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _shared_exec(model, cache_dtype):
+    per_model = _EXEC_CACHE.setdefault(model, {})
+    key = jnp.dtype(cache_dtype).name
+    if key not in per_model:
+        per_model[key] = (
+            build_decode_step(model),
+            jax.jit(lambda p, b, cap: model.prefill(p, b, cap,
+                                                    cache_dtype=cache_dtype),
+                    static_argnums=(2,)),
+        )
+    return per_model[key]
+
+
+class FleetEngine:
+    """One peer's continuous batcher: paged pool + compile-once decode."""
+
+    def __init__(self, model, params: PyTree, config: FleetConfig,
+                 cache_dtype=jnp.float32, keep_logits: bool = False):
+        self.model = model
+        self.params = params
+        self.config = config
+        self.cache_dtype = cache_dtype
+        self.keep_logits = keep_logits
+        self.pool = PagedCachePool(
+            model, max_slots=config.max_slots, block_size=config.block_size,
+            num_blocks=config.num_blocks,
+            max_blocks_per_slot=config.max_blocks_per_slot,
+            cache_dtype=cache_dtype)
+        self._decode, self._prefill = _shared_exec(model, cache_dtype)
+        self.now_ms = 0.0
+        self.steps = 0
+        self.weights_version = -1        # bumped by router weight refresh
+        self.pending: Deque[RequestRecord] = deque()  # future arrivals
+        self.waiting: Deque[RequestRecord] = deque()  # admission queue
+        self.slots: Dict[int, _Slot] = {}             # slot id -> live req
+        self.records: List[RequestRecord] = []
+        # deterministic accounting
+        self.kv_bytes_written = 0
+        self.decode_tokens = 0
+        self.prefill_tokens = 0
+        self.rejected = 0
+        self.peak_utilization = 0.0
+        cfg = model.cfg
+        n_attn = len(self.pool.kv_subs) * self.pool.n_scan
+        self._kv_bytes_per_token = int(
+            n_attn * 2 * cfg.num_kv_heads * cfg.resolved_head_dim
+            * jnp.dtype(cache_dtype).itemsize)
+
+    # ---- intake ------------------------------------------------------------
+    def set_params(self, params: PyTree) -> None:
+        self.params = params         # args of the jitted fns: no recompile
+
+    def enqueue(self, request: Request, canary: bool = False) -> RequestRecord:
+        rec = RequestRecord(request, canary=canary)
+        self.records.append(rec)
+        self.pending.append(rec)     # router submits in arrival order
+        return rec
+
+    @property
+    def load(self) -> int:
+        # pending counts too: the router enqueues at arrival time, and ticks
+        # may not run between closely-spaced arrivals — without it,
+        # least_loaded would route a whole burst to one peer on stale load
+        return len(self.slots) + len(self.waiting) + len(self.pending)
+
+    def has_work(self) -> bool:
+        return bool(self.slots or self.waiting or self.pending)
+
+    def next_arrival_ms(self) -> Optional[float]:
+        return self.pending[0].request.arrival_ms if self.pending else None
+
+    # ---- the engine tick ---------------------------------------------------
+    def _intake(self) -> None:
+        while self.pending and \
+                self.pending[0].request.arrival_ms <= self.now_ms:
+            rec = self.pending.popleft()
+            if len(self.waiting) >= self.config.max_queue:
+                rec.rejected = True
+                self.rejected += 1
+                continue
+            self.waiting.append(rec)
+
+    def _admit(self) -> int:
+        """Prefill + join up to ``max_prefills_per_step`` waiting requests.
+        Returns prefilled token count (for the simulated cost model)."""
+        admitted_tokens = 0
+        n = 0
+        while self.waiting and n < self.config.max_prefills_per_step:
+            rec = self.waiting[0]
+            req = rec.request
+            total = req.prompt_len + req.max_new
+            if self.pool.blocks_needed(total) > min(
+                    self.pool.num_blocks - 1, self.pool.max_blocks_per_slot):
+                # larger than the pool itself: shed instead of wedging the queue
+                self.waiting.popleft()
+                rec.rejected = True
+                self.rejected += 1
+                continue
+            free_slots = [s for s in range(self.config.max_slots)
+                          if s not in self.slots]
+            if not free_slots or not self.pool.can_admit(total):
+                break                # head-of-line: wait for evictions
+            self.waiting.popleft()
+            slot = free_slots[0]
+            self.pool.allocate(slot, total)
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, cache = self._prefill(self.params, {"tokens": tokens},
+                                          req.prompt_len)
+            self.pool.insert_prefill(slot, cache, req.prompt_len)
+            first = int(jnp.argmax(logits[0, -1]))
+            rec.admitted_ms = self.now_ms
+            rec.tokens.append(first)
+            if self.keep_logits or rec.canary:
+                rec.prefill_logits = np.asarray(logits[0, -1], np.float32)
+            self.slots[slot] = _Slot(rec, remaining=req.max_new - 1,
+                                     next_token=first)
+            admitted_tokens += req.prompt_len
+            self.prefill_tokens += req.prompt_len
+            self.kv_bytes_written += req.prompt_len * self._kv_bytes_per_token
+            n += 1
+        return admitted_tokens
+
+    def _decode_tick(self) -> bool:
+        live = sorted(s for s, sl in self.slots.items() if sl.remaining > 0)
+        if not live:
+            return False
+        S = self.config.max_slots
+        active = np.zeros((S,), bool)
+        active[live] = True
+        tokens = np.zeros((S, 1), np.int32)
+        for s in live:
+            tokens[s, 0] = self.slots[s].next_token
+        wslot, woff = self.pool.write_maps(active)
+        logits, kv, states = self._decode(
+            self.params, self.pool.kv, self.pool.states,
+            jnp.asarray(self.pool.table), jnp.asarray(self.pool.lengths),
+            jnp.asarray(wslot), jnp.asarray(woff), jnp.asarray(tokens))
+        self.pool.kv = kv
+        self.pool.states = states
+        new_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        for s in live:
+            self.pool.lengths[s] += 1
+            sl = self.slots[s]
+            tok = int(new_tokens[s])
+            sl.record.tokens.append(tok)
+            sl.next_token = tok
+            sl.remaining -= 1
+            self.decode_tokens += 1
+            self.kv_bytes_written += self._kv_bytes_per_token
+        return True
+
+    def _evict(self, finish_ms: float) -> None:
+        for s in [s for s, sl in self.slots.items() if sl.remaining <= 0]:
+            sl = self.slots.pop(s)
+            sl.record.finished_ms = finish_ms
+            self.pool.free_slot(s)
+
+    def step(self) -> bool:
+        """One engine tick; returns False when nothing could progress (the
+        caller should jump the clock to the next arrival)."""
+        self._intake()
+        admitted_tokens = self._admit()
+        newly = {s for s, sl in self.slots.items()
+                 if sl.record.admitted_ms == self.now_ms}
+        decoded = self._decode_tick()
+        if admitted_tokens == 0 and not decoded:
+            # single-token requests can still finish on prefill alone
+            self._evict(self.now_ms)
+            return False
+        cost = (self.config.step_overhead_ms
+                + self.config.prefill_ms_per_token * admitted_tokens
+                + (self.config.decode_ms_per_step if decoded else 0.0))
+        self.now_ms += cost
+        for s in newly:
+            self.slots[s].record.first_token_ms = self.now_ms
+        self._evict(self.now_ms)
+        self.steps += 1
+        self.peak_utilization = max(self.peak_utilization,
+                                    self.pool.utilization())
+        if self.config.defrag_every and \
+                self.steps % self.config.defrag_every == 0:
+            self.pool.defrag()
+        return True
+
+    def advance_to(self, t_ms: float) -> None:
+        """Run ticks until the clock reaches ``t_ms`` (or work runs dry,
+        in which case the clock jumps forward — idle time is free)."""
+        while self.now_ms < t_ms:
+            if not self.step():
+                nxt = self.next_arrival_ms()
+                self.now_ms = t_ms if nxt is None else min(t_ms,
+                                                           max(nxt, self.now_ms))
+                if nxt is None or nxt > t_ms:
+                    break
+
+    def drain(self) -> None:
+        while self.slots or self.waiting or self.pending:
+            if not self.step():
+                nxt = self.next_arrival_ms()
+                if nxt is None:
+                    break
+                self.now_ms = max(self.now_ms, nxt)

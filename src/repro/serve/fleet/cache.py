@@ -1,0 +1,182 @@
+"""Slot-paged KV-cache pool: block allocate / free / defrag over one shared
+buffer, plus dense per-slot states for the recurrent sublayers.
+
+Attention is the only cache that grows with context, so only attention KV is
+paged: per scanned layer step, K and V pools of shape
+``(n_scan, num_blocks, block_size, KV, hd)`` shared by every decode slot,
+with one host-side block table ``(max_slots, max_blocks_per_slot)`` naming
+each slot's blocks in sequence order (the same table indexes every layer —
+allocation is per-slot, not per-layer). Recurrent sublayers (mamba / rwkv)
+are O(1) per slot and live in dense ``(n_scan, max_slots, ...)`` state
+buffers. Block 0 is the reserved null block: never allocated, all dead table
+entries point at it (see ``repro.kernels.paged_cache``).
+
+Allocation is deterministic (lowest-index free blocks first) so seeded fleet
+runs are bit-reproducible. ``defrag()`` compacts live blocks to the lowest
+indices — with table indirection fragmentation never breaks correctness, but
+compaction keeps the live region contiguous (sequential HBM reads, cheap
+pool shrink) after heavy join/evict churn.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import _init_sub_cache, _n_scan, _sub_kinds
+
+PyTree = Any
+
+
+class PagedCachePool:
+    def __init__(self, model, *, max_slots: int, block_size: int,
+                 num_blocks: int, max_blocks_per_slot: int,
+                 cache_dtype=jnp.float32):
+        cfg = model.cfg
+        assert cfg.sliding_window <= 0, \
+            "paged serving assumes full-length attention (no ring buffer)"
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.block_size = block_size
+        self.num_blocks = num_blocks          # includes the null block 0
+        self.max_blocks_per_slot = max_blocks_per_slot
+        self.cache_dtype = cache_dtype
+        self.kinds = _sub_kinds(cfg)
+        self.n_scan = _n_scan(cfg)
+
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        self.kv_subs = [i for i, (m, _f) in enumerate(self.kinds)
+                        if m == "attn"]
+        # device state: paged KV per attention sublayer...
+        self.kv: Dict[str, Dict[str, jax.Array]] = {
+            f"sub{i}": {
+                "k": jnp.zeros((self.n_scan, num_blocks, block_size, kv, hd),
+                               cache_dtype),
+                "v": jnp.zeros((self.n_scan, num_blocks, block_size, kv, hd),
+                               cache_dtype),
+            } for i in self.kv_subs}
+        # ...and dense per-slot recurrent states for the rest
+        rec_subs = [(i, m) for i, (m, _f) in enumerate(self.kinds)
+                    if m != "attn"]
+        if rec_subs:
+            def one(_):
+                return {f"sub{i}": _init_sub_cache(cfg, m, max_slots, 1,
+                                                   cache_dtype)
+                        for i, m in rec_subs}
+            self.states: PyTree = jax.vmap(one)(jnp.arange(self.n_scan))
+        else:
+            self.states = {}
+
+        # host-side allocator state (numpy: the scheduler is host-driven)
+        self.table = np.zeros((max_slots, max_blocks_per_slot), np.int32)
+        self.lengths = np.zeros((max_slots,), np.int32)
+        self.slot_blocks: List[List[int]] = [[] for _ in range(max_slots)]
+        self.free: List[int] = list(range(1, num_blocks))  # 0 = null block
+
+    # ---- allocator ---------------------------------------------------------
+    def blocks_needed(self, total_tokens: int) -> int:
+        return -(-total_tokens // self.block_size)
+
+    def can_admit(self, total_tokens: int) -> bool:
+        n = self.blocks_needed(total_tokens)
+        return n <= len(self.free) and n <= self.max_blocks_per_slot
+
+    def allocate(self, slot: int, total_tokens: int) -> List[int]:
+        """Reserve the slot's full worst-case context (prompt + max output)
+        at admission — reservation-on-admit admission control: an admitted
+        request can never deadlock waiting for blocks mid-decode."""
+        n = self.blocks_needed(total_tokens)
+        assert self.can_admit(total_tokens), (n, len(self.free))
+        assert not self.slot_blocks[slot], f"slot {slot} already allocated"
+        blocks = [self.free.pop(0) for _ in range(n)]  # lowest-index first
+        self.slot_blocks[slot] = blocks
+        self.table[slot, :] = 0
+        self.table[slot, :n] = blocks
+        return blocks
+
+    def free_slot(self, slot: int) -> None:
+        self.free.extend(self.slot_blocks[slot])
+        self.free.sort()                      # deterministic reuse order
+        self.slot_blocks[slot] = []
+        self.table[slot, :] = 0
+        self.lengths[slot] = 0
+
+    def live_blocks(self) -> int:
+        return sum(len(b) for b in self.slot_blocks)
+
+    def utilization(self) -> float:
+        return self.live_blocks() / max(1, self.num_blocks - 1)
+
+    # ---- data movement -----------------------------------------------------
+    def insert_prefill(self, slot: int, cache: PyTree, length: int) -> None:
+        """Scatter a per-request prefill cache (leaves ``(n_scan, 1, ...)``
+        from ``model.prefill`` with ``cap == length``) into the slot's
+        allocated blocks / state row."""
+        bs = self.block_size
+        nb = self.blocks_needed(length)
+        ids = jnp.asarray(self.slot_blocks[slot][:nb], jnp.int32)
+        pad = nb * bs - length
+        for i in self.kv_subs:
+            for name in ("k", "v"):
+                src = cache[f"sub{i}"][name][:, 0]            # (n_scan, L, kv, hd)
+                src = jnp.pad(src, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                src = src.reshape(self.n_scan, nb, bs, *src.shape[2:])
+                self.kv[f"sub{i}"][name] = (
+                    self.kv[f"sub{i}"][name].at[:, ids]
+                    .set(src.astype(self.cache_dtype)))
+        self.states = jax.tree.map(
+            lambda dst, full: dst.at[:, slot].set(full[:, 0].astype(dst.dtype)),
+            self.states, _strip_attn(cache, self.kv_subs))
+        self.lengths[slot] = length
+
+    def write_maps(self, active: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Invert slot->(block, offset) appends into the per-block writer
+        maps ``paged_scatter`` wants, for the slots flagged active."""
+        wslot = np.full((self.num_blocks,), -1, np.int32)
+        woff = np.zeros((self.num_blocks,), np.int32)
+        for s in np.nonzero(active)[0]:
+            pos = int(self.lengths[s])
+            blk = self.slot_blocks[s][pos // self.block_size]
+            wslot[blk] = s
+            woff[blk] = pos % self.block_size
+        return wslot, woff
+
+    # ---- defrag ------------------------------------------------------------
+    def defrag(self) -> int:
+        """Compact live blocks to the lowest pool indices (stable in
+        (slot, sequence) order). Returns the number of blocks moved."""
+        live: List[int] = []
+        for s in range(self.max_slots):
+            live.extend(self.slot_blocks[s])
+        remap = {old: new for new, old in enumerate(live, start=1)}
+        moved = sum(1 for o, n in remap.items() if o != n)
+        if moved == 0:
+            return 0
+        # permutation: new block index -> old block index (identity for the
+        # null block and the free tail)
+        perm = np.arange(self.num_blocks)
+        for old, new in remap.items():
+            perm[new] = old
+        used = 1 + len(live)
+        perm[used:] = sorted(set(range(self.num_blocks))
+                             - set(perm[:used].tolist()))
+        perm_j = jnp.asarray(perm, jnp.int32)
+        for i in self.kv_subs:
+            for name in ("k", "v"):
+                self.kv[f"sub{i}"][name] = self.kv[f"sub{i}"][name][:, perm_j]
+        for s in range(self.max_slots):
+            self.slot_blocks[s] = [remap[b] for b in self.slot_blocks[s]]
+            n = len(self.slot_blocks[s])
+            self.table[s, :] = 0
+            self.table[s, :n] = self.slot_blocks[s]
+        self.free = list(range(used, self.num_blocks))
+        return moved
+
+
+def _strip_attn(cache: PyTree, kv_subs: List[int]) -> Dict:
+    """Drop the attention sublayer entries from a per-request prefill cache,
+    leaving the recurrent-state subtree matching ``PagedCachePool.states``."""
+    drop = {f"sub{i}" for i in kv_subs}
+    return {k: v for k, v in cache.items() if k not in drop}

@@ -1,0 +1,120 @@
+"""Batched decode over the paged KV pool: one jitted step for all slots.
+
+Mirrors ``LM.decode``'s scan-over-layers, but attention sublayers read/write
+the shared block pool through the ``repro.kernels.paged_cache`` kernels
+instead of a dense per-call cache, and every slot carries its OWN absolute
+position (= its current context length) — the ragged substrate continuous
+batching needs. Recurrent sublayers (mamba / rwkv) reuse the model's
+``_sublayer_decode`` unchanged (their state is position-free).
+
+Numerics are kept identical to the dense engine path: same projections, same
+fp32 masked softmax, same cache-dtype handling — masked (dead / padded)
+slots contribute exactly 0 after ``exp(NEG - max)`` underflow, so per-slot
+logits match single-request ``Engine.generate`` decode and greedy streams
+are token-identical (the fleet-vs-engine parity pinned in tests/test_fleet.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_cache import paged_gather, paged_scatter
+from repro.models import attention as attn
+from repro.models.common import apply_norm, embed_tokens, lm_head
+from repro.models.ffn import ffn_forward
+from repro.models.moe import moe_forward
+from repro.models.transformer import _n_scan, _sub_kinds, _sublayer_decode
+
+PyTree = Any
+
+
+def _paged_attention_decode(p: Dict, x: jax.Array, kv: Dict[str, jax.Array],
+                            table: jax.Array, lengths: jax.Array,
+                            write_slot: jax.Array, write_off: jax.Array,
+                            cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode for every slot against its paged context.
+
+    x (S,1,d); kv {"k","v"}: (NB,BS,KVh,hd) pools for THIS layer; table
+    (S,MB); lengths (S,) = each slot's context length == the new token's
+    absolute position; write_slot/write_off (NB,) from
+    ``PagedCachePool.write_maps`` (inactive slots appear in no map entry,
+    so they never touch the pool).
+    """
+    bs = kv["k"].shape[1]
+    positions = lengths[:, None]                       # (S,1) per-slot pos
+    q, k_new, v_new = attn._project_qkv(p, x, cfg)
+    q = attn.apply_rope(q, positions, cfg.rope_theta)
+    k_new = attn.apply_rope(k_new, positions, cfg.rope_theta)
+
+    k_pool = paged_scatter(kv["k"], k_new[:, 0], write_slot, write_off)
+    v_pool = paged_scatter(kv["v"], v_new[:, 0], write_slot, write_off)
+    n_live = (lengths + bs) // bs                      # blocks incl. new token
+    k = paged_gather(k_pool, table, n_live)            # (S, MB*BS, KVh, hd)
+    v = paged_gather(v_pool, table, n_live)
+
+    scores = attn._gqa_scores(q, k)                    # (S, H, 1, MB*BS)
+    slot_pos = jnp.arange(k.shape[1])
+    valid = (slot_pos[None, :] <= lengths[:, None])[:, None, None, :]
+    scores = jnp.where(valid, scores, attn.NEG_INF)
+    w = attn._softmax(scores).astype(x.dtype)
+    out = attn._out_proj(p, attn._gqa_combine(w, v))
+    return out, {"k": k_pool, "v": v_pool}
+
+
+def _attn_sublayer(p: Dict, x: jax.Array, kv, table, lengths, write_slot,
+                   write_off, cfg, ffn_kind: str):
+    h = apply_norm(p["norm1"], x, cfg.norm_eps)
+    h, kv = _paged_attention_decode(p["mix"], h, kv, table, lengths,
+                                    write_slot, write_off, cfg)
+    x = x + h
+    h2 = apply_norm(p["norm2"], x, cfg.norm_eps)
+    if ffn_kind == "moe":
+        h2, _ = moe_forward(p["ffn"], h2, cfg, capacity_factor=0.0)
+    else:
+        h2 = ffn_forward(p["ffn"], h2, cfg)
+    return x + h2, kv
+
+
+def build_decode_step(model):
+    """Compile-once batched decode: (params, kv, states, table, lengths,
+    write_slot, write_off, tokens) -> (logits (S,V), kv, states).
+
+    All operands have step-invariant shapes, so the returned jit compiles
+    exactly once per fleet engine and every scheduler tick reuses it.
+    """
+    cfg = model.cfg
+    kinds = _sub_kinds(cfg)
+
+    def step(params, kv, states, table, lengths, write_slot, write_off,
+             tokens):
+        dtype = cfg.activation_dtype
+        x = embed_tokens(params["embed"], tokens, dtype)   # (S,1,d)
+        if "embed_norm" in params:
+            x = apply_norm(params["embed_norm"], x, cfg.norm_eps)
+
+        def body(carry, xs):
+            h = carry
+            lp, kv_l, st_l = xs
+            kv_out, st_out = {}, {}
+            for i, (m, f) in enumerate(kinds):
+                name = f"sub{i}"
+                if m == "attn":
+                    h, kv_out[name] = _attn_sublayer(
+                        lp[name], h, kv_l[name], table, lengths,
+                        write_slot, write_off, cfg, f)
+                else:
+                    h, st_out[name] = _sublayer_decode(
+                        lp[name], h, st_l[name], cfg, m, f,
+                        jnp.zeros((), jnp.int32))
+            return h, (kv_out, st_out)
+
+        x, (kv, states) = jax.lax.scan(body, x, (params["layers"], kv,
+                                                 states))
+        x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = lm_head(params["embed"], x)               # (S,1,V)
+        return logits[:, -1], kv, states
+
+    n_scan = _n_scan(cfg)  # noqa: F841  (validates the scan layout early)
+    return jax.jit(step)

@@ -1,0 +1,272 @@
+"""Peer-aware routing across N codistilled replicas + the fleet driver.
+
+Codistillation's deployment story (Anil et al. 2018; PAPER.md Section 6.6)
+is that training yields N independently-serveable, equally-good models. The
+router turns that into capacity and safety:
+
+  * ``round_robin``   — cyclic assignment (equal-quality peers need no
+                        affinity);
+  * ``least_loaded``  — assign to the peer with the fewest queued+live
+                        requests at arrival (ties -> lowest peer id);
+  * ``ensemble``      — every request runs on ALL peers; the rotating
+                        primary answers the client, the shadows feed the
+                        agreement signal (the expensive, fully-covered
+                        variant of the canary).
+
+Because the peers trained against each other's predictions, their logits
+agree far more than independently-trained models' — so DISAGREEMENT is a
+cheap health signal. Every ``canary_every``-th request is duplicated to the
+next peer and the pair's prefill logits are compared with
+``distill_pair("mse", ...)`` (the training-side agreement metric, reused
+verbatim): a peer whose canary divergence spikes has drifted (bad refresh,
+corrupt weights) and is flagged, mirroring how codistillation monitors
+peer agreement during training.
+
+Weight refresh mirrors the async runtime mailbox's keep-last policy
+(docs/runtime.md): ``checkpoint/io.py`` snapshots are polled every
+``refresh_every_ms`` of simulated time; only a snapshot STRICTLY NEWER than
+the peer's current weights is adopted (keep-last — never roll back), and a
+snapshot more than ``staleness_bound`` steps behind the newest available is
+dropped rather than adopted, exactly the mailbox's drop-vs-keep decision.
+Refreshes happen at tick boundaries (serving never blocks on a load).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import (load_snapshot_params, snapshot_meta)
+from repro.core.codistillation import distill_pair
+from repro.models.common import count_params
+from repro.serve.fleet.batcher import FleetConfig, FleetEngine, RequestRecord
+from repro.serve.fleet.workload import Workload
+
+PyTree = Any
+
+POLICIES = ("round_robin", "least_loaded", "ensemble")
+
+
+@dataclass
+class CanaryStats:
+    count: int = 0
+    mse_sum: float = 0.0
+    mse_max: float = 0.0
+    token_agree: int = 0
+    token_total: int = 0
+
+    def observe(self, primary: RequestRecord, shadow: RequestRecord) -> None:
+        if primary.prefill_logits is None or shadow.prefill_logits is None:
+            return
+        a = jnp.asarray(primary.prefill_logits)[None, :]
+        b = jnp.asarray(shadow.prefill_logits)[None, :]
+        mse = float(distill_pair("mse", a, b))
+        self.count += 1
+        self.mse_sum += mse
+        self.mse_max = max(self.mse_max, mse)
+        n = min(len(primary.tokens), len(shadow.tokens))
+        self.token_total += n
+        self.token_agree += sum(1 for x, y in zip(primary.tokens[:n],
+                                                  shadow.tokens[:n]) if x == y)
+
+    def summary(self) -> Dict:
+        return {
+            "count": self.count,
+            "mean_mse": self.mse_sum / self.count if self.count else 0.0,
+            "max_mse": self.mse_max,
+            "token_agreement": (self.token_agree / self.token_total
+                                if self.token_total else 1.0),
+        }
+
+
+@dataclass
+class FleetReport:
+    """SLO + accounting summary of one fleet run (all times simulated ms)."""
+    scenario: str
+    router: str
+    peers: int
+    seed: int
+    completed: int
+    rejected: int
+    p50_ttft_ms: float
+    p99_ttft_ms: float
+    p50_e2e_ms: float
+    p99_e2e_ms: float
+    slo_ms: float
+    slo_attainment: float            # fraction with TTFT <= slo_ms
+    sim_tokens_per_s: float
+    generated_tokens: int
+    kv_bytes_written: int
+    refresh_bytes: int
+    refreshes: int
+    refreshes_dropped_stale: int
+    peak_pool_utilization: float
+    canary: Dict = field(default_factory=dict)
+    stream_digest: str = ""          # sha256 over client token streams
+
+    def to_json(self) -> str:
+        return json.dumps(self.__dict__, indent=1, sort_keys=True)
+
+
+def _pct(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    return float(np.percentile(np.asarray(xs), q))
+
+
+class FleetRouter:
+    def __init__(self, model, peer_params: List[PyTree],
+                 config: Optional[FleetConfig] = None,
+                 policy: str = "round_robin",
+                 cache_dtype=jnp.float32,
+                 canary_every: int = 0,
+                 snapshot_dir: Optional[str] = None,
+                 refresh_every_ms: float = 0.0,
+                 staleness_bound: int = 0):
+        assert policy in POLICIES, (policy, POLICIES)
+        assert len(peer_params) >= 1
+        self.policy = policy
+        self.config = config or FleetConfig()
+        self.engines = [FleetEngine(model, p, self.config,
+                                    cache_dtype=cache_dtype,
+                                    keep_logits=(policy == "ensemble"))
+                        for p in peer_params]
+        self.canary_every = canary_every
+        self.snapshot_dir = snapshot_dir
+        self.refresh_every_ms = refresh_every_ms
+        self.staleness_bound = staleness_bound
+        self._next_refresh_ms = refresh_every_ms
+        self._rr = 0
+        self._since_canary = 0
+        self._param_bytes = sum(
+            count_params(p) * 4 for p in peer_params) // len(peer_params)
+        self.refresh_bytes = 0
+        self.refreshes = 0
+        self.refreshes_dropped_stale = 0
+        self.canary_stats = CanaryStats()
+        # (primary record, shadow record) pairs compared after the run
+        self._pairs: List[tuple] = []
+        self._primaries: List[RequestRecord] = []
+
+    # ---- routing -----------------------------------------------------------
+    def _pick(self) -> int:
+        if self.policy == "least_loaded":
+            loads = [e.load for e in self.engines]
+            return int(np.argmin(loads))     # ties -> lowest peer id
+        peer = self._rr % len(self.engines)
+        self._rr += 1
+        return peer
+
+    def _route(self, request) -> None:
+        n = len(self.engines)
+        if self.policy == "ensemble":
+            primary = self._rr % n
+            self._rr += 1
+            prec = self.engines[primary].enqueue(request)
+            self._primaries.append(prec)
+            for off in range(1, n):
+                srec = self.engines[(primary + off) % n].enqueue(
+                    request, canary=True)
+                self._pairs.append((prec, srec))
+            return
+        peer = self._pick()
+        prec = self.engines[peer].enqueue(request)
+        self._primaries.append(prec)
+        self._since_canary += 1
+        if (self.canary_every and n > 1
+                and self._since_canary >= self.canary_every):
+            self._since_canary = 0
+            prec.canary = True       # keep the primary's prefill logits too
+            shadow = (peer + 1) % n
+            srec = self.engines[shadow].enqueue(request, canary=True)
+            self._pairs.append((prec, srec))
+
+    # ---- weight refresh (keep-last, staleness-bounded) ---------------------
+    def refresh_now(self) -> int:
+        """One poll of the snapshot directory; returns peers refreshed."""
+        if not self.snapshot_dir:
+            return 0
+        n0 = self.refreshes
+        metas = [snapshot_meta(self.snapshot_dir, i)
+                 for i in range(len(self.engines))]
+        steps = [m.get("step", -1) if m else -1 for m in metas]
+        newest = max(steps) if steps else -1
+        for i, eng in enumerate(self.engines):
+            step = steps[i]
+            if step < 0 or step <= eng.weights_version:
+                continue             # keep-last: never adopt older weights
+            if self.staleness_bound and newest - step > self.staleness_bound:
+                self.refreshes_dropped_stale += 1
+                continue             # too stale vs the fleet's newest: drop
+            params = load_snapshot_params(self.snapshot_dir, i, eng.params)
+            eng.set_params(params)
+            eng.weights_version = step
+            self.refreshes += 1
+            self.refresh_bytes += self._param_bytes
+        return self.refreshes - n0
+
+    def _maybe_refresh(self, t_ms: float) -> None:
+        if not self.snapshot_dir or self.refresh_every_ms <= 0:
+            return
+        if t_ms >= self._next_refresh_ms:
+            # one poll per catch-up, however long the simulated gap: the
+            # intermediate polls would all observe the same directory state
+            periods = int((t_ms - self._next_refresh_ms)
+                          // self.refresh_every_ms) + 1
+            self._next_refresh_ms += periods * self.refresh_every_ms
+            self.refresh_now()
+
+    # ---- the run loop ------------------------------------------------------
+    def run(self, workload: Workload, slo_ms: float = 50.0) -> FleetReport:
+        for req in sorted(workload.requests, key=lambda r: r.arrival_ms):
+            self._maybe_refresh(req.arrival_ms)
+            for eng in self.engines:
+                eng.advance_to(req.arrival_ms)
+            self._route(req)
+        for eng in self.engines:
+            eng.drain()
+        end_ms = max((eng.now_ms for eng in self.engines), default=0.0)
+        self._maybe_refresh(end_ms)
+        for prec, srec in self._pairs:
+            self.canary_stats.observe(prec, srec)
+        return self._report(workload, slo_ms, end_ms)
+
+    def _report(self, workload: Workload, slo_ms: float,
+                end_ms: float) -> FleetReport:
+        done = [r for r in self._primaries if r.finished_ms is not None]
+        ttfts = [r.ttft_ms for r in done]
+        e2es = [r.e2e_ms for r in done]
+        gen = sum(len(r.tokens) for r in done)
+        digest = hashlib.sha256()
+        for r in sorted(self._primaries, key=lambda r: r.request.rid):
+            digest.update(bytes(f"{r.request.rid}:", "ascii"))
+            digest.update(np.asarray(r.tokens, np.int32).tobytes())
+        return FleetReport(
+            scenario=workload.scenario,
+            router=self.policy,
+            peers=len(self.engines),
+            seed=workload.seed,
+            completed=len(done),
+            # client-facing rejections only: canary/ensemble shadows are
+            # bookkeeping duplicates and must not read as shed client traffic
+            rejected=sum(1 for r in self._primaries if r.rejected),
+            p50_ttft_ms=_pct(ttfts, 50), p99_ttft_ms=_pct(ttfts, 99),
+            p50_e2e_ms=_pct(e2es, 50), p99_e2e_ms=_pct(e2es, 99),
+            slo_ms=slo_ms,
+            slo_attainment=(sum(1 for t in ttfts if t <= slo_ms) / len(ttfts)
+                            if ttfts else 0.0),
+            sim_tokens_per_s=gen / (end_ms / 1e3) if end_ms > 0 else 0.0,
+            generated_tokens=gen,
+            kv_bytes_written=sum(e.kv_bytes_written for e in self.engines),
+            refresh_bytes=self.refresh_bytes,
+            refreshes=self.refreshes,
+            refreshes_dropped_stale=self.refreshes_dropped_stale,
+            peak_pool_utilization=max(e.peak_utilization
+                                      for e in self.engines),
+            canary=self.canary_stats.summary(),
+            stream_digest=digest.hexdigest(),
+        )

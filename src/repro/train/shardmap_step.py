@@ -14,10 +14,18 @@ the paper's Section-3 accounting on TPU topology. It is CLI-reachable as
 """
 from __future__ import annotations
 
+import warnings
+
 from typing import Any, Callable, Optional
 
 from repro.configs.base import CodistConfig, TrainConfig
 from repro.train.engine import ShardMapCompressed, build_train_step
+
+warnings.warn(
+    "repro.train.shardmap_step is deprecated: use the ShardMapCompressed "
+    "strategy with repro.train.engine.build_train_step "
+    "(see docs/exchange_strategies.md)",
+    DeprecationWarning, stacklevel=2)
 
 PyTree = Any
 

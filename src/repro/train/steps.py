@@ -14,6 +14,8 @@ callers, the distributed tests, and the benchmark suite. Shared helpers
 """
 from __future__ import annotations
 
+import warnings
+
 from typing import Any, Callable, Dict, Optional, Tuple
 
 from repro.configs.base import CodistConfig, TrainConfig
@@ -33,6 +35,12 @@ from repro.train.engine import (  # noqa: F401  (re-exported shared helpers)
     refresh_stale,
 )
 from repro.train.state import init_peer_state  # noqa: F401 (moved to state)
+
+warnings.warn(
+    "repro.train.steps is deprecated: build steps with "
+    "repro.train.engine.build_train_step + an ExchangeStrategy "
+    "(see docs/exchange_strategies.md)",
+    DeprecationWarning, stacklevel=2)
 
 PyTree = Any
 

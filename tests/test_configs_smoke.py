@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs import ASSIGNED_ARCHS, TrainConfig, get_config, get_reduced
 from repro.models import build_model
-from repro.train import init_train_state, make_allreduce_step
+from repro.train import AllReduce, build_train_step, init_train_state
 from repro.optim import make_optimizer
 
 
@@ -51,7 +51,8 @@ def test_reduced_forward_and_train_step(arch):
                      optimizer="adamw")
     opt_init, _ = make_optimizer("adamw")
     state = init_train_state(model, jax.random.key(1), opt_init)
-    step = jax.jit(make_allreduce_step(model, tc))
+    step = jax.jit(
+        build_train_step(model, tc, None, AllReduce()).variants["on"])
     state2, metrics = step(state, batch)
     assert bool(jnp.isfinite(metrics["loss"])), f"{arch}: non-finite loss"
     assert int(state2.step) == 1

@@ -37,7 +37,8 @@ from repro.configs import CodistConfig, TrainConfig, get_reduced
 from repro.models import build_model
 from repro.data import MarkovLM, make_lm_batch
 from repro.train import stack_batches, init_codist_state
-from repro.train import steps as steps_mod
+from repro.train.engine import (AllReduce, PredictionExchange,
+                                build_train_step)
 from repro.optim import make_optimizer
 from repro.launch.mesh import make_host_mesh, set_mesh
 from repro.launch import sharding as sh
@@ -53,7 +54,8 @@ opt_init, _ = make_optimizer('sgdm')
 state = init_codist_state(model, jax.random.key(0), 2, opt_init)
 batch = stack_batches([make_lm_batch(task, 4, 16, 0, None, seed=0)
                        for _ in range(2)])
-step = steps_mod.make_codist_step(model, codist, tc, distill=True)
+step = build_train_step(model, tc, codist,
+                        PredictionExchange(codist)).variants['on']
 """
 
 
@@ -106,7 +108,7 @@ coll_c = parse_collectives(comp_c.as_text(), devices_per_pod=4)
 from repro.train import init_train_state
 ar_state = init_train_state(model, jax.random.key(0), opt_init)
 ar_batch = make_lm_batch(task, 8, 16, 0, None, seed=0)
-ar_step = steps_mod.make_allreduce_step(model, tc)
+ar_step = build_train_step(model, tc, None, AllReduce()).variants['on']
 ar_state_sds = jax.eval_shape(lambda: ar_state)
 ar_state_sh = sh.state_shardings(ar_state_sds, mesh)
 ar_batch_sh = sh.batch_shardings(jax.eval_shape(lambda: ar_batch), mesh)

@@ -1,0 +1,366 @@
+"""Serving-fleet tests: continuous batching vs the dense engine (the parity
+invariant), seeded determinism, admission control, defrag, routing policies,
+staleness-bounded weight refresh, and the checkpoint->serve round trip."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from dataclasses import replace
+
+from repro.checkpoint.io import save_snapshot
+from repro.configs import CodistConfig, TrainConfig, get_reduced
+from repro.models import build_model
+from repro.serve import Engine
+from repro.serve.fleet import (FleetConfig, FleetRouter, Request, SCENARIOS,
+                               generate_workload)
+
+
+def _tiny_cfg():
+    return replace(get_reduced("qwen1.5-0.5b"), num_layers=2, d_model=64,
+                   d_ff=128, vocab_size=64, num_heads=2, num_kv_heads=2,
+                   head_dim=32)
+
+
+def _requests(cfg, lens, max_new=5, gap_ms=1.0, seed=0):
+    """Handcrafted request list (few unique lengths keeps prefill traces
+    cheap); arrivals ``gap_ms`` apart force mid-stream join/evict churn."""
+    rng = np.random.default_rng(seed)
+    return [Request(i, i * gap_ms,
+                    tuple(int(x) for x in rng.integers(0, cfg.padded_vocab,
+                                                       size=l)),
+                    max_new)
+            for i, l in enumerate(lens)]
+
+
+class _ListWorkload:
+    def __init__(self, requests, scenario="custom", seed=0):
+        self.requests = requests
+        self.scenario = scenario
+        self.seed = seed
+
+
+# ----------------------------------------------------------------------------
+# the acceptance invariant: fleet == per-request Engine.generate, with churn
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "rwkv6-1.6b"])
+def test_fleet_parity_with_churn(arch):
+    """Continuous-batched decode through the paged pool is token-identical
+    (temperature 0) to sequential Engine.generate — with 2 decode slots and
+    8 staggered requests, so joins/evictions happen mid-stream."""
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    reqs = _requests(cfg, [5, 9, 12, 7, 5, 9, 12, 7], max_new=5)
+    fc = FleetConfig(max_slots=2, block_size=4, num_blocks=32,
+                     max_blocks_per_slot=8, max_prefills_per_step=1)
+    router = FleetRouter(model, [params], config=fc)
+    rep = router.run(_ListWorkload(reqs), slo_ms=50.0)
+    assert rep.completed == len(reqs)
+
+    # churn actually happened: some request was admitted while another was
+    # mid-stream (admitted after it but before it finished)
+    recs = router._primaries
+    assert any(a.admitted_ms is not None and b.admitted_ms is not None
+               and b.admitted_ms > a.admitted_ms
+               and b.admitted_ms < a.finished_ms
+               for a in recs for b in recs if a is not b), \
+        "no mid-stream join observed — churn not exercised"
+
+    eng = Engine(model, params)
+    for rec in recs:
+        req = rec.request
+        ref = eng.generate(
+            {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}, req.max_new)
+        want = np.asarray(ref.tokens[0, req.prompt_len:]).tolist()
+        assert rec.tokens == want, \
+            f"{arch} rid {req.rid}: fleet {rec.tokens} != engine {want}"
+
+
+def test_fleet_parity_hybrid_and_moe():
+    """The paged decode handles attn+ssm (jamba) and moe-ffn (grok) scans."""
+    for arch in ["jamba-v0.1-52b", "grok-1-314b"]:
+        cfg = get_reduced(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(1))
+        reqs = _requests(cfg, [6, 10, 6], max_new=4)
+        fc = FleetConfig(max_slots=2, block_size=4, num_blocks=32,
+                         max_blocks_per_slot=8)
+        router = FleetRouter(model, [params], config=fc)
+        rep = router.run(_ListWorkload(reqs))
+        assert rep.completed == 3
+        eng = Engine(model, params)
+        for rec in router._primaries:
+            req = rec.request
+            ref = eng.generate(
+                {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]},
+                req.max_new)
+            assert rec.tokens == np.asarray(
+                ref.tokens[0, req.prompt_len:]).tolist(), (arch, req.rid)
+
+
+# ----------------------------------------------------------------------------
+# determinism / workload / scheduler behavior (tiny model)
+# ----------------------------------------------------------------------------
+
+def test_workload_seeded_and_bounded():
+    wl1 = generate_workload("bursty", 32, 64, seed=9, max_prompt=16,
+                            max_new=8)
+    wl2 = generate_workload("bursty", 32, 64, seed=9, max_prompt=16,
+                            max_new=8)
+    assert wl1.requests == wl2.requests, "same seed must replay exactly"
+    wl3 = generate_workload("bursty", 32, 64, seed=10, max_prompt=16,
+                            max_new=8)
+    assert wl1.requests != wl3.requests
+    times = [r.arrival_ms for r in wl1.requests]
+    assert times == sorted(times) and times[0] > 0
+    assert all(1 <= r.prompt_len <= 16 and 1 <= r.max_new <= 8
+               for r in wl1.requests)
+    assert all(0 <= t < 64 for r in wl1.requests for t in r.prompt)
+    for name in SCENARIOS:
+        assert generate_workload(name, 4, 64, seed=0).requests
+
+
+def test_fleet_seeded_determinism_and_report():
+    cfg = _tiny_cfg()
+    model = build_model(cfg)
+    peers = [model.init(jax.random.key(i)) for i in range(2)]
+
+    def run(seed):
+        wl = generate_workload("diurnal", 16, cfg.padded_vocab, seed=seed,
+                               max_prompt=12, max_new=5)
+        fc = FleetConfig(max_slots=3, block_size=4, num_blocks=48,
+                         max_blocks_per_slot=8)
+        r = FleetRouter(model, peers, config=fc, policy="round_robin",
+                        canary_every=5)
+        return r.run(wl, slo_ms=40.0)
+
+    a, b, c = run(3), run(3), run(4)
+    assert a.to_json() == b.to_json(), "same seed -> same SLO report"
+    assert a.stream_digest != c.stream_digest
+    doc = json.loads(a.to_json())
+    for key in ("p50_ttft_ms", "p99_ttft_ms", "slo_attainment",
+                "sim_tokens_per_s", "kv_bytes_written", "stream_digest"):
+        assert key in doc
+    assert a.completed == 16 and a.generated_tokens > 0
+    assert a.kv_bytes_written > 0
+
+
+def test_admission_control_sheds_load():
+    cfg = _tiny_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    # queue bound 1 + simultaneous arrivals: overflow must be REJECTED
+    reqs = _requests(cfg, [8] * 6, max_new=4, gap_ms=0.0)
+    fc = FleetConfig(max_slots=1, block_size=4, num_blocks=16,
+                     max_blocks_per_slot=4, max_queue=1)
+    router = FleetRouter(model, [params], config=fc)
+    rep = router.run(_ListWorkload(reqs))
+    assert rep.rejected > 0
+    assert rep.completed + rep.rejected == 6
+    # a request larger than the pool itself is shed, not wedged
+    big = _requests(cfg, [8], max_new=200)
+    router2 = FleetRouter(model, [params], config=fc)
+    rep2 = router2.run(_ListWorkload(big))
+    assert rep2.rejected == 1 and rep2.completed == 0
+
+
+def test_defrag_preserves_streams():
+    cfg = _tiny_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    def run(defrag_every):
+        reqs = _requests(cfg, [5, 9, 7, 5, 9, 7], max_new=5)
+        fc = FleetConfig(max_slots=2, block_size=4, num_blocks=24,
+                         max_blocks_per_slot=8, defrag_every=defrag_every)
+        r = FleetRouter(model, [params], config=fc)
+        rep = r.run(_ListWorkload(reqs))
+        return rep.stream_digest, r.engines[0].pool
+
+    d0, _ = run(0)
+    d1, pool = run(1)
+    assert d0 == d1, "defrag changed decoded streams"
+    # after full drain + compaction the free list is contiguous from 1
+    assert pool.live_blocks() == 0
+    assert pool.free == list(range(1, pool.num_blocks))
+
+
+def test_router_policies():
+    cfg = _tiny_cfg()
+    model = build_model(cfg)
+    peers = [model.init(jax.random.key(i)) for i in range(3)]
+    wl = lambda: _ListWorkload(_requests(cfg, [6, 6, 6, 6, 6, 6],  # noqa: E731
+                                         max_new=4))
+    fc = FleetConfig(max_slots=2, block_size=4, num_blocks=32,
+                     max_blocks_per_slot=4)
+    rr = FleetRouter(model, peers, config=fc, policy="round_robin")
+    rep_rr = rr.run(wl())
+    assert rep_rr.completed == 6
+    assert all(len(e.records) == 2 for e in rr.engines)  # cyclic spread
+
+    ll = FleetRouter(model, peers, config=fc, policy="least_loaded")
+    assert ll.run(wl()).completed == 6
+
+    en = FleetRouter(model, peers, config=fc, policy="ensemble")
+    rep_en = en.run(wl())
+    assert rep_en.completed == 6
+    # every peer saw every request; shadows feed the agreement signal
+    assert all(len(e.records) == 6 for e in en.engines)
+    assert rep_en.canary["count"] == 12                 # 2 shadows x 6
+    assert rep_en.canary["mean_mse"] > 0                # independent inits
+    assert 0.0 <= rep_en.canary["token_agreement"] <= 1.0
+
+
+def test_canary_divergence_zero_for_identical_peers():
+    cfg = _tiny_cfg()
+    model = build_model(cfg)
+    p = model.init(jax.random.key(0))
+    fc = FleetConfig(max_slots=2, block_size=4, num_blocks=32,
+                     max_blocks_per_slot=4)
+    router = FleetRouter(model, [p, p], config=fc, policy="round_robin",
+                         canary_every=2)
+    rep = router.run(_ListWorkload(_requests(cfg, [6, 6, 6, 6], max_new=4)))
+    assert rep.canary["count"] == 2
+    assert rep.canary["mean_mse"] == 0.0
+    assert rep.canary["token_agreement"] == 1.0
+
+
+# ----------------------------------------------------------------------------
+# weight refresh: keep-last + staleness bound (the mailbox policy, serving-side)
+# ----------------------------------------------------------------------------
+
+def test_weight_refresh_keep_last_and_staleness(tmp_path):
+    cfg = _tiny_cfg()
+    model = build_model(cfg)
+    p_old = model.init(jax.random.key(0))
+    p_new0 = model.init(jax.random.key(1))
+    p_new1 = model.init(jax.random.key(2))
+    snap = str(tmp_path / "snaps")
+    # peer0 publishes step 10, peer1 only step 1: with bound 5, peer1's
+    # snapshot is 9 steps behind the newest available -> dropped
+    save_snapshot(snap, 0, {"params": p_new0}, meta={"step": 10})
+    save_snapshot(snap, 1, {"params": p_new1}, meta={"step": 1})
+    fc = FleetConfig(max_slots=1, block_size=4, num_blocks=16,
+                     max_blocks_per_slot=4)
+    router = FleetRouter(model, [p_old, p_old], config=fc,
+                         snapshot_dir=snap, staleness_bound=5)
+    assert router.refresh_now() == 1
+    assert router.engines[0].weights_version == 10
+    assert router.engines[1].weights_version == -1
+    assert router.refreshes_dropped_stale == 1
+    got = jax.tree.leaves(router.engines[0].params)[0]
+    want = jax.tree.leaves(p_new0)[0]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    # keep-last: republishing an OLDER step must not roll peer0 back
+    # (and peer1's step-1 snapshot stays 6 behind the newest -> still dropped)
+    save_snapshot(snap, 0, {"params": p_old}, meta={"step": 7})
+    assert router.refresh_now() == 0
+    assert router.engines[0].weights_version == 10
+    assert router.engines[1].weights_version == -1
+    # a newer snapshot for peer1 (within the bound) is adopted
+    save_snapshot(snap, 1, {"params": p_new1}, meta={"step": 9})
+    assert router.refresh_now() == 1
+    assert router.engines[1].weights_version == 9
+    assert router.refresh_bytes > 0
+
+
+# ----------------------------------------------------------------------------
+# checkpoint -> serve round trip (trained codist peers into the fleet)
+# ----------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_codist_to_fleet(tmp_path):
+    """save_snapshot from a short codist run -> router weight refresh ->
+    the refreshed peer's prefill logits match the training-side forward of
+    bundle.apply's final params."""
+    from repro.data import MarkovLM, make_lm_batch
+    from repro.optim import make_optimizer
+    from repro.train import stack_batches
+    from repro.train.engine import PredictionExchange, build_train_step
+
+    cfg = _tiny_cfg()
+    model = build_model(cfg)
+    task = MarkovLM(vocab=cfg.vocab_size, seed=0)
+    tc = TrainConfig(lr=1e-2, total_steps=6, warmup_steps=0,
+                     optimizer="sgdm")
+    codist = CodistConfig(n_models=2)
+    strategy = PredictionExchange(codist)
+    opt_init, _ = make_optimizer("sgdm")
+    bundle = build_train_step(model, tc, codist, strategy)
+    state = strategy.init_state(model, tc, jax.random.key(0), opt_init)
+    for step in range(4):
+        batch = stack_batches([make_lm_batch(task, 2, 12, step, None, seed=0)
+                               for _ in range(2)])
+        state, _metrics, _plan = bundle.apply(state, batch, step)
+
+    snap = str(tmp_path / "snaps")
+    for i in range(2):
+        peer_params = jax.tree.map(lambda x: x[i], state.params)
+        save_snapshot(snap, i, {"params": peer_params},
+                      meta={"step": int(state.step)})
+
+    stale = [model.init(jax.random.key(99)), model.init(jax.random.key(98))]
+    fc = FleetConfig(max_slots=2, block_size=4, num_blocks=16,
+                     max_blocks_per_slot=4)
+    router = FleetRouter(model, stale, config=fc, snapshot_dir=snap)
+    assert router.refresh_now() == 2
+
+    tokens = jnp.asarray(
+        np.random.default_rng(5).integers(0, cfg.vocab_size, size=(1, 10)),
+        jnp.int32)
+    for i, eng in enumerate(router.engines):
+        # training-side reference: forward through the trained peer params
+        train_params = jax.tree.map(lambda x: x[i], state.params)
+        full, _aux = model.forward(train_params, {"tokens": tokens})
+        logits, _cache = eng._prefill(eng.params, {"tokens": tokens},
+                                      tokens.shape[1])
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(full[:, -1]),
+                                   rtol=2e-4, atol=2e-4,
+                                   err_msg=f"peer {i} logits diverge from "
+                                           "the trained replica")
+
+
+# ----------------------------------------------------------------------------
+# deprecation satellite: steps modules warn on import, repro.train does not
+# ----------------------------------------------------------------------------
+
+def _run_py(code):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True, env=env)
+
+
+def test_deprecated_step_modules_warn_on_import():
+    # fresh interpreter per module: the warning fires once, at import time
+    # (the error filter is installed after jax/repro.train, so only the
+    # deprecated module's own warning can trip it)
+    for mod in ("repro.train.steps", "repro.train.shardmap_step"):
+        r = _run_py(
+            "import warnings, repro.train\n"
+            "warnings.simplefilter('error', DeprecationWarning)\n"
+            f"import {mod}\n")
+        assert r.returncode != 0 and "DeprecationWarning" in r.stderr, \
+            f"{mod} must emit DeprecationWarning on import:\n{r.stderr}"
+
+
+def test_train_package_import_stays_warning_free():
+    """Importing repro.train (and using the engine API) must NOT touch the
+    deprecated modules — the lazy __getattr__ keeps them out of the hot
+    import path, so only genuinely legacy callers see the warning."""
+    r = _run_py(
+        "import jax, sys, warnings\n"
+        "warnings.simplefilter('error', DeprecationWarning)\n"
+        "import repro.train\n"
+        "assert 'repro.train.steps' not in sys.modules\n"
+        "assert 'repro.train.shardmap_step' not in sys.modules\n")
+    assert r.returncode == 0, r.stderr

@@ -237,14 +237,17 @@ class TestStepVariantsFused:
     @pytest.mark.parametrize("distill_loss", ["mse", "kl"])
     def test_prediction_step(self, setup, distill_loss):
         from repro.configs import CodistConfig
-        from repro.train import steps as steps_mod
+        from repro.train.engine import PredictionExchange, build_train_step
         model, state, _, _, batch = setup
         codist = CodistConfig(n_models=2, distill_loss=distill_loss)
         for distill in (True, False):
-            s_f, m_f = steps_mod.make_codist_step(
-                model, codist, self._tc(True), distill)(state, batch)
-            s_r, m_r = steps_mod.make_codist_step(
-                model, codist, self._tc(False), distill)(state, batch)
+            v = "on" if distill else "off"
+            s_f, m_f = build_train_step(
+                model, self._tc(True), codist,
+                PredictionExchange(codist)).variants[v](state, batch)
+            s_r, m_r = build_train_step(
+                model, self._tc(False), codist,
+                PredictionExchange(codist)).variants[v](state, batch)
             assert np.isfinite(float(m_f["loss"]))
             np.testing.assert_allclose(float(m_f["loss"]),
                                        float(m_r["loss"]), rtol=1e-4,
@@ -252,39 +255,46 @@ class TestStepVariantsFused:
 
     def test_checkpoint_step(self, setup):
         from repro.configs import CodistConfig
-        from repro.train import steps as steps_mod
+        from repro.train.engine import CheckpointExchange, build_train_step
         model, state, _, _, batch = setup
         codist = CodistConfig(n_models=2, mode="checkpoints")
-        _, m_f = steps_mod.make_codist_checkpoint_step(
-            model, codist, self._tc(True))(state, batch)
-        _, m_r = steps_mod.make_codist_checkpoint_step(
-            model, codist, self._tc(False))(state, batch)
+        _, m_f = build_train_step(
+            model, self._tc(True), codist,
+            CheckpointExchange(codist)).variants["on"](state, batch)
+        _, m_r = build_train_step(
+            model, self._tc(False), codist,
+            CheckpointExchange(codist)).variants["on"](state, batch)
         np.testing.assert_allclose(float(m_f["loss"]), float(m_r["loss"]),
                                    rtol=1e-4, atol=1e-4)
 
     def test_pipelined_step(self, setup):
         from repro.configs import CodistConfig
-        from repro.train import steps as steps_mod
+        from repro.train.engine import PipelinedPredictions, build_train_step
+        from repro.train.state import init_peer_state
         model, state, _, _, batch = setup
         codist = CodistConfig(n_models=2, pipelined=True)
         logits, _ = model.forward(
             jax.tree.map(lambda x: x[0], state.params),
             jax.tree.map(lambda x: x[0], batch))
-        peer = steps_mod.init_peer_state(batch, (2,) + logits.shape)
+        peer = init_peer_state(batch, (2,) + logits.shape)
         st = state._replace(peer=peer)
-        _, m_f = steps_mod.make_codist_pipelined_step(
-            model, codist, self._tc(True))(st, batch)
-        _, m_r = steps_mod.make_codist_pipelined_step(
-            model, codist, self._tc(False))(st, batch)
+        _, m_f = build_train_step(
+            model, self._tc(True), codist,
+            PipelinedPredictions(codist)).variants["on"](st, batch)
+        _, m_r = build_train_step(
+            model, self._tc(False), codist,
+            PipelinedPredictions(codist)).variants["on"](st, batch)
         np.testing.assert_allclose(float(m_f["loss"]), float(m_r["loss"]),
                                    rtol=1e-4, atol=1e-4)
 
     def test_allreduce_step(self, setup):
-        from repro.train import steps as steps_mod
+        from repro.train.engine import AllReduce, build_train_step
         model, _, single, batch1, _ = setup
-        _, m_f = steps_mod.make_allreduce_step(
-            model, self._tc(True))(single, batch1)
-        _, m_r = steps_mod.make_allreduce_step(
-            model, self._tc(False))(single, batch1)
+        _, m_f = build_train_step(
+            model, self._tc(True), None,
+            AllReduce()).variants["on"](single, batch1)
+        _, m_r = build_train_step(
+            model, self._tc(False), None,
+            AllReduce()).variants["on"](single, batch1)
         np.testing.assert_allclose(float(m_f["loss"]), float(m_r["loss"]),
                                    rtol=1e-4, atol=1e-4)

@@ -129,3 +129,71 @@ class TestOpsWrappers:
                                                       interpret=True)))
         core = float(distill_mse(a, b))
         assert kern == pytest.approx(core, rel=1e-5)
+
+
+class TestPagedCache:
+    """Serving-fleet paged KV pool gather/scatter vs the jnp oracles."""
+
+    def _pool(self, nb=10, bs=4, kv=2, hd=8, seed=0):
+        key = jax.random.key(seed)
+        return jax.random.normal(key, (nb, bs, kv, hd), jnp.float32)
+
+    def test_gather_matches_ref_and_zeroes_dead_blocks(self):
+        from repro.kernels.paged_cache import paged_gather, paged_gather_ref
+        pool = self._pool()
+        table = jnp.asarray([[1, 2, 0], [3, 0, 0], [4, 5, 6]], jnp.int32)
+        n_live = jnp.asarray([2, 1, 3], jnp.int32)
+        got = paged_gather(pool, table, n_live, interpret=True)
+        want = paged_gather_ref(pool, table, n_live)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # positions past the live region are exactly zero (decode's mask
+        # relies on masked scores, but the gather must not leak junk)
+        np.testing.assert_array_equal(np.asarray(got[0, 8:]), 0.0)
+        np.testing.assert_array_equal(np.asarray(got[1, 4:]), 0.0)
+
+    def test_scatter_matches_ref_and_preserves_untouched(self):
+        from repro.kernels.paged_cache import (paged_scatter,
+                                               paged_scatter_ref)
+        pool = self._pool()
+        new = jax.random.normal(jax.random.key(1), (3, 2, 8), jnp.float32)
+        wslot = np.full((10,), -1, np.int32)
+        woff = np.zeros((10,), np.int32)
+        wslot[2], woff[2] = 0, 3
+        wslot[3], woff[3] = 1, 1
+        wslot[6], woff[6] = 2, 2
+        got = paged_scatter(pool, new, jnp.asarray(wslot), jnp.asarray(woff),
+                            interpret=True)
+        want = paged_scatter_ref(pool, new, jnp.asarray(wslot),
+                                 jnp.asarray(woff))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # written rows carry the new KV; every other row is untouched
+        np.testing.assert_array_equal(np.asarray(got[2, 3]),
+                                      np.asarray(new[0]))
+        np.testing.assert_array_equal(np.asarray(got[2, :3]),
+                                      np.asarray(pool[2, :3]))
+        untouched = [0, 1, 4, 5, 7, 8, 9]
+        np.testing.assert_array_equal(np.asarray(got)[untouched],
+                                      np.asarray(pool)[untouched])
+
+    def test_scatter_then_gather_roundtrip(self):
+        from repro.kernels.paged_cache import paged_gather, paged_scatter
+        pool = jnp.zeros((6, 2, 1, 4), jnp.float32)
+        table = jnp.asarray([[1, 2], [3, 0]], jnp.int32)
+        # slot 0 appends 3 tokens, slot 1 appends 1: offsets walk the blocks
+        writes = [(0, 1, 0), (0, 1, 1), (0, 2, 0), (1, 3, 0)]
+        vals = {}
+        for t, (s, blk, off) in enumerate(writes):
+            new = jnp.full((2, 1, 4), float(t + 1), jnp.float32)
+            wslot = np.full((6,), -1, np.int32)
+            woff = np.zeros((6,), np.int32)
+            wslot[blk], woff[blk] = s, off
+            pool = paged_scatter(pool, new, jnp.asarray(wslot),
+                                 jnp.asarray(woff), interpret=True)
+            vals[(s, blk, off)] = float(t + 1)
+        out = paged_gather(pool, table, jnp.asarray([2, 1], jnp.int32),
+                           interpret=True)
+        assert float(out[0, 0, 0, 0]) == vals[(0, 1, 0)]
+        assert float(out[0, 1, 0, 0]) == vals[(0, 1, 1)]
+        assert float(out[0, 2, 0, 0]) == vals[(0, 2, 0)]
+        assert float(out[1, 0, 0, 0]) == vals[(1, 3, 0)]
+        np.testing.assert_array_equal(np.asarray(out[1, 2:]), 0.0)

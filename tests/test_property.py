@@ -183,7 +183,7 @@ class TestMicrobatchEquivalence:
     def test_grad_accumulation_matches_full_batch(self, seed):
         """k-microbatch fp32 accumulation == full-batch gradient (linearity
         of the mean-CE loss in the batch axis)."""
-        from repro.train.steps import _grads_with_metrics
+        from repro.train.engine import _grads_with_metrics
         w0 = jax.random.normal(jax.random.key(seed), (6, 4))
         x = jax.random.normal(jax.random.key(seed + 1), (8, 6))
         y = jax.random.randint(jax.random.key(seed + 2), (8,), 0, 4)

@@ -107,6 +107,62 @@ def test_engine_greedy_generation_deterministic():
     np.testing.assert_array_equal(np.asarray(r1.tokens), np.asarray(r2.tokens))
 
 
+@pytest.mark.parametrize("arch", ["qwen2-7b", "rwkv6-1.6b"])
+def test_ragged_batch_matches_per_request(arch):
+    """A right-padded mixed-length batch with ``prompt_lens`` must generate
+    token-for-token what per-request generation produces at temperature 0 —
+    the invariant the fleet's continuous batcher relies on (pads must never
+    leak into attention caches or recurrent states)."""
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = Engine(model, params)
+    b, max_len, new = 4, 12, 6
+    prompt = jax.random.randint(jax.random.key(3), (b, max_len), 0,
+                                cfg.padded_vocab)
+    lens = [12, 5, 9, 7]
+    ragged = eng.generate({"tokens": prompt}, new, prompt_lens=lens)
+    assert ragged.tokens.shape == (b, max_len + new)
+    assert ragged.prompt_lens == lens
+    for r, l in enumerate(lens):
+        ref = eng.generate({"tokens": prompt[r:r + 1, :l]}, new)
+        np.testing.assert_array_equal(
+            np.asarray(ragged.tokens[r, max_len:]),
+            np.asarray(ref.tokens[0, l:]),
+            err_msg=f"{arch} row {r} (len {l}) diverges from per-request")
+
+
+def test_cache_dtype_default_and_parity():
+    """``cache_dtype`` is configurable end-to-end: the backend default is
+    fp32 in interpret/CPU mode (bf16 on TPU), the CLI spellings resolve, and
+    a bf16 cache stays within logits-parity tolerance of the fp32 cache."""
+    from repro.serve import default_cache_dtype, resolve_cache_dtype
+    assert jax.default_backend() != "tpu"
+    assert default_cache_dtype() == jnp.float32
+    assert resolve_cache_dtype("auto") == jnp.float32
+    assert resolve_cache_dtype("bf16") == jnp.bfloat16
+    assert resolve_cache_dtype("fp32") == jnp.float32
+    with pytest.raises(ValueError):
+        resolve_cache_dtype("int8")
+
+    cfg = get_reduced("qwen2-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _inputs(cfg, b=2, s=10)
+    outs = {}
+    for name, dtype in (("fp32", jnp.float32), ("bf16", jnp.bfloat16)):
+        logits, cache = model.prefill(params, batch, cap=12,
+                                      cache_dtype=dtype)
+        logits2, _ = model.decode(params, cache,
+                                  batch["tokens"][:, -1:] * 0 + 1,
+                                  jnp.int32(10))
+        outs[name] = np.asarray(logits2[:, 0], np.float32)
+    scale = np.abs(outs["fp32"]).max()
+    np.testing.assert_allclose(outs["bf16"], outs["fp32"],
+                               atol=2e-2 * scale, rtol=0,
+                               err_msg="bf16 cache beyond parity tolerance")
+
+
 def test_engine_sampling_varies_with_seed():
     cfg = get_reduced("qwen1.5-0.5b")
     model = build_model(cfg)

@@ -27,7 +27,7 @@ Exit codes: 0 clean, 1 regression(s) (a readable table says which), 2
 usage error (missing/empty files, no comparable rows). To bless a new
 baseline after an intentional change, regenerate it and commit:
 
-    PYTHONPATH=src python -m benchmarks.run --only throughput,fault,sweep_smoke \\
+    PYTHONPATH=src python -m benchmarks.run --only throughput,fault,sweep_smoke,serving \\
         --quick --json BENCH_throughput.json
 
 (see docs/experiments.md for when a re-bless is legitimate). This script
@@ -162,7 +162,7 @@ def main(argv: Optional[List[str]] = None) -> int:
               "comm_bytes).")
         print("If the change is intentional, bless a new baseline:\n"
               "    PYTHONPATH=src python -m benchmarks.run "
-              "--only throughput,fault,sweep_smoke --quick "
+              "--only throughput,fault,sweep_smoke,serving --quick "
               "--json BENCH_throughput.json")
         return 1
     print(f"\nOK: {len(records)} row(s) within tolerance "

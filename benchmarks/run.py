@@ -5,8 +5,9 @@
 
 Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally writes
 the rows as a JSON document (the committed ``BENCH_throughput.json`` perf
-trajectory is ``--only throughput,fault,sweep_smoke,serving --quick --json
-BENCH_throughput.json``; ``tools/bench_compare.py`` gates CI runs against
+trajectory is ``--only throughput,fault,sweep_smoke,serving,serving_chaos
+--quick --json BENCH_throughput.json``; ``tools/bench_compare.py`` gates CI
+runs against
 it — see docs/experiments.md). Unknown ``--only`` names exit 2 with the
 registered list.
 Mapping to the paper:
@@ -20,6 +21,7 @@ Mapping to the paper:
     fault       codist vs all-reduce barrier under seeded fault injection
     sweep_smoke paper-grid sweep harness end-to-end (run/resume/aggregate)
     serving     continuous-batching fleet: latency/SLO per workload scenario
+    serving_chaos  fleet under fault injection: defended vs undefended SLO
     throughput  step-variant microbench + kernel interpret timings
     roofline    §Roofline summary from the dry-run artifacts
 """
@@ -47,6 +49,7 @@ REGISTRY = {
     "fault": "benchmarks.fault_tolerance",
     "sweep_smoke": "benchmarks.sweep_smoke",
     "serving": "benchmarks.serving",
+    "serving_chaos": "benchmarks.serving_chaos",
     "comm": "benchmarks.comm_sweep",
     "throughput": "benchmarks.throughput",
     "roofline": "benchmarks.roofline_table",

@@ -56,7 +56,7 @@ def run(quick: bool = False) -> List[Dict]:
 
     # (b) predictions-drift vs parameter-drift ratio along a codist run,
     # driven through the strategy-engine API (build_train_step + plan
-    # dispatch) rather than the deprecated make_codist_step alias
+    # dispatch)
     from repro.optim import make_optimizer
     from repro.train import build_train_step, resolve_strategy
     codist = CodistConfig(n_models=2)

@@ -23,15 +23,46 @@ def _flatten(tree: PyTree):
 
 
 def save_pytree(path: str, tree: PyTree, meta: Optional[dict] = None) -> None:
+    """Write ``path + ".npz"`` (payload) and ``path + ".tree.json"`` (treedef
+    + meta) ATOMICALLY: both files are fully written to temporaries and
+    ``os.replace``d into place, payload first — a crash mid-save leaves
+    either the previous complete snapshot or the new one, never a truncated
+    payload (which recovery / the serving fleet's weight refresh would
+    otherwise load). The meta file is replaced last, so its ``step`` never
+    points ahead of the payload actually on disk."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     leaves, treedef = _flatten(tree)
-    np.savez(path + ".npz", **{f"leaf_{i}": np.asarray(x)
-                               for i, x in enumerate(leaves)})
+    tmp_npz = path + ".npz.tmp"
+    with open(tmp_npz, "wb") as f:
+        np.savez(f, **{f"leaf_{i}": np.asarray(x)
+                       for i, x in enumerate(leaves)})
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp_npz, path + ".npz")
     doc = {"treedef": str(treedef), "n_leaves": len(leaves)}
     if meta:
         doc["meta"] = meta
-    with open(path + ".tree.json", "w") as f:
+    tmp_json = path + ".tree.json.tmp"
+    with open(tmp_json, "w") as f:
         json.dump(doc, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp_json, path + ".tree.json")
+
+
+def _load_npz_leaves(path: str, n: int):
+    """Read ``n`` leading ``leaf_i`` arrays, raising a clear error for a
+    corrupt/truncated payload instead of a garbage restore."""
+    try:
+        data = np.load(path)
+        if len(data.files) < n:
+            raise ValueError(f"has {len(data.files)} leaves, need {n}")
+        return data, [np.asarray(data[f"leaf_{i}"]) for i in range(n)]
+    except Exception as e:
+        raise ValueError(
+            f"corrupt or unreadable checkpoint payload {path!r}: "
+            f"{type(e).__name__}: {e} — the snapshot was not restored; "
+            "delete it (or re-save) and retry") from e
 
 
 def read_meta(path: str) -> Optional[dict]:
@@ -74,13 +105,12 @@ def load_snapshot_params(directory: str, peer: int,
     serving-side consumers restore them against a params-only template
     without knowing the optimizer state's structure.
     """
-    data = np.load(snapshot_path(directory, peer) + ".npz")
     like_leaves, treedef = _flatten(params_like)
-    assert len(data.files) >= len(like_leaves), \
-        (len(data.files), len(like_leaves), "snapshot smaller than params")
+    _, raw = _load_npz_leaves(snapshot_path(directory, peer) + ".npz",
+                              len(like_leaves))
     import jax.numpy as jnp
-    restored = [jnp.asarray(data[f"leaf_{i}"], dtype=l.dtype)
-                for i, l in enumerate(like_leaves)]
+    restored = [jnp.asarray(x, dtype=l.dtype)
+                for x, l in zip(raw, like_leaves)]
     for got, want in zip(restored, like_leaves):
         assert got.shape == want.shape, \
             (got.shape, want.shape, "snapshot params/template mismatch")
@@ -93,10 +123,9 @@ def load_snapshot(directory: str, peer: int, like: PyTree) -> PyTree:
 
 def load_pytree(path: str, like: PyTree) -> PyTree:
     """Restore into the structure of ``like`` (shape/dtype template)."""
-    data = np.load(path + ".npz")
-    leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
     like_leaves, treedef = _flatten(like)
-    assert len(leaves) == len(like_leaves), "checkpoint/template mismatch"
+    data, leaves = _load_npz_leaves(path + ".npz", len(like_leaves))
+    assert len(data.files) == len(like_leaves), "checkpoint/template mismatch"
     import jax.numpy as jnp
     restored = [jnp.asarray(x, dtype=l.dtype) for x, l in zip(leaves, like_leaves)]
     return jax.tree_util.tree_unflatten(treedef, restored)

@@ -79,6 +79,17 @@ def model_bits(cfg: ModelConfig, param_bits: int = 32) -> float:
     return cfg.param_count() * param_bits
 
 
+def param_bits_of(params) -> float:
+    """b_model measured from a LIVE parameter pytree (actual dtypes), so
+    consumers that move whole replicas — the runtime's checkpoint-mode
+    mailbox and the serving fleet's weight refresh — bill bytes through one
+    ledger and stay directly comparable."""
+    import jax
+
+    return float(sum(x.size * x.dtype.itemsize * 8
+                     for x in jax.tree_util.tree_leaves(params)))
+
+
 def prediction_bits_classifier(num_classes: int, logit_bits: int = 32) -> float:
     """b_pred for a classifier: one logit vector per sample."""
     return num_classes * logit_bits

@@ -11,6 +11,15 @@ writes the full JSON report; ``--snapshot-dir`` points the router's
 staleness-bounded weight refresh at ``checkpoint/io.py`` peer snapshots
 (e.g. from ``--mode codist-async --checkpoint-every``). The legacy
 single-engine batched-generate path lives behind ``--single``.
+
+Chaos serving (docs/chaos.md): ``--faults`` takes the SAME spec syntax as
+``repro.launch.train`` (``straggler=1*4@0.2,preempt=1@40+400,fail=1@60``;
+pauses in simulated ms here) and injects it on the fleet's decode-tick
+clock. Defenses are on by default when faults are injected — disable with
+``--no-defend`` for the undefended baseline, add ``--hedge`` for hedged
+dispatch, and flip ``--degraded-admission off`` to keep full queue bounds
+under reduced capacity. ``--recover-after-ms`` revives failed peers from
+their snapshots.
 """
 from __future__ import annotations
 
@@ -22,9 +31,10 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, get_reduced, list_archs
 from repro.models import build_model
+from repro.runtime.clock import parse_faults
 from repro.serve import Engine, resolve_cache_dtype
-from repro.serve.fleet import (POLICIES, SCENARIOS, FleetConfig, FleetRouter,
-                               generate_workload)
+from repro.serve.fleet import (POLICIES, SCENARIOS, ChaosConfig, FleetConfig,
+                               FleetDefense, FleetRouter, generate_workload)
 
 
 def main() -> None:
@@ -57,6 +67,27 @@ def main() -> None:
                          "staleness-bounded weight refresh")
     ap.add_argument("--refresh-every-ms", type=float, default=0.0)
     ap.add_argument("--staleness-bound", type=int, default=0)
+    # ---- chaos (docs/chaos.md) ----
+    ap.add_argument("--faults", default="none",
+                    help="seeded fault spec on the decode-tick clock, same "
+                         "syntax as repro.launch.train (pauses in sim ms): "
+                         "straggler=P*F@FRAC,preempt=P@T+PAUSE,fail=P@T,"
+                         "hetero=SIGMA")
+    ap.add_argument("--fault-horizon", type=int, default=4096,
+                    help="fault-schedule realization horizon (decode ticks)")
+    ap.add_argument("--recover-after-ms", type=float, default=0.0,
+                    help="revive failed peers from their snapshot after this "
+                         "much simulated time (0: stay dead)")
+    ap.add_argument("--no-defend", action="store_true",
+                    help="inject faults WITHOUT router defenses (the "
+                         "undefended baseline)")
+    ap.add_argument("--hedge", action="store_true",
+                    help="hedged dispatch: run the slowest-decile requests "
+                         "on two peers, first winner cancels the other")
+    ap.add_argument("--degraded-admission", default="on",
+                    choices=("on", "off"),
+                    help="scale queue bounds with available capacity so a "
+                         "shrunken fleet sheds at the edge")
     ap.add_argument("--report", default="", help="write the JSON report here")
     # ---- legacy single-engine mode ----
     ap.add_argument("--single", action="store_true",
@@ -87,12 +118,23 @@ def main() -> None:
                      max_blocks_per_slot=max(
                          1, -(-(args.max_prompt + args.max_new)
                               // args.block_size)))
+    chaos = defense = None
+    if args.faults and args.faults != "none":
+        chaos = ChaosConfig(
+            parse_faults(args.faults, args.peers, seed=args.seed),
+            horizon_ticks=args.fault_horizon,
+            recover_after_ms=args.recover_after_ms)
+    if (chaos is not None and not args.no_defend) or args.hedge:
+        defense = FleetDefense(
+            hedging=args.hedge,
+            degraded_admission=(args.degraded_admission == "on"))
     router = FleetRouter(model, peer_params, config=fc, policy=args.router,
                          cache_dtype=cache_dtype,
                          canary_every=args.canary_every,
                          snapshot_dir=args.snapshot_dir or None,
                          refresh_every_ms=args.refresh_every_ms,
-                         staleness_bound=args.staleness_bound)
+                         staleness_bound=args.staleness_bound,
+                         chaos=chaos, defense=defense)
     if args.snapshot_dir:
         n = router.refresh_now()
         print(f"initial weight refresh: {n}/{args.peers} peers from "
@@ -119,6 +161,14 @@ def main() -> None:
         print(f"canary: n={rep.canary['count']} "
               f"mean_mse={rep.canary['mean_mse']:.4f} "
               f"token_agreement={rep.canary['token_agreement']:.3f}")
+    if chaos is not None or defense is not None:
+        print(f"chaos: defended={'no' if defense is None else 'yes'} "
+              f"goodput tok/s = {rep.goodput_tokens_per_s:.1f}  "
+              f"lost/dup tokens = {rep.lost_tokens}/{rep.duplicated_tokens}")
+        print(f"  migrations={rep.migrations} "
+              f"(failed: {rep.migration_failures})  hedges={rep.hedges} "
+              f"(wins: {rep.hedge_wins})  preemptions={rep.preemptions}  "
+              f"died/recovered={rep.peers_died}/{rep.peers_recovered}")
     print(f"stream digest = {rep.stream_digest}")
     if args.report:
         with open(args.report, "w") as f:

@@ -3,9 +3,17 @@
 The runtime never reads the wall clock: every peer advances a **simulated**
 clock by a per-step duration drawn from a seeded :class:`FaultSchedule`, so a
 run is a pure function of ``(configs, seed)`` and is replayable bit-for-bit.
-The schedule models the failure modes that motivate codistillation's weak
-synchronization (Anil et al., arXiv:1804.03235; "Revisiting Distributed
-Synchronous SGD", arXiv:1604.00981):
+
+The schedule is **unit-agnostic**: a "step" is whatever the consumer's clock
+ticks in — a training step for the async runtime, a decode tick for the
+serving fleet's chaos driver (``repro.serve.fleet.chaos``) — and a
+"duration" is a dimensionless multiple of the peer's base tick cost.
+``duration()`` gives the full seconds-per-step (base speed x episode
+multiplier); ``slowdown()`` gives the same number as a pure multiplier for
+consumers whose tick cost is set elsewhere (the fleet's deterministic
+per-tick cost model). The schedule models the failure modes that motivate
+codistillation's weak synchronization (Anil et al., arXiv:1804.03235;
+"Revisiting Distributed Synchronous SGD", arXiv:1604.00981):
 
   * **speed heterogeneity** — each peer has a base seconds-per-step drawn
     once (lognormal around 1.0, ``speed_sigma``) or given explicitly;
@@ -109,8 +117,16 @@ class FaultSchedule:
         mult = self.mult[peer, step] if step < self.total_steps else 1.0
         return float(self.speeds[peer] * mult)
 
+    def slowdown(self, peer: int, step: int) -> float:
+        """``duration`` as a dimensionless multiplier of the peer's base tick
+        cost — for consumers (the serving fleet) whose per-tick cost model
+        lives elsewhere. Identical to ``duration`` because the base speed is
+        itself a multiple of the unit tick."""
+        return self.duration(peer, step)
+
     def pause_after(self, peer: int, step: int) -> float:
-        """Preemption pause (sim seconds) following local step `step`."""
+        """Preemption pause (simulated time units) following local step
+        `step` — the consumer scales it into its own clock's units."""
         return self.preempt.get((peer, step), 0.0)
 
     def fails_at(self, peer: int) -> Optional[int]:
@@ -149,6 +165,29 @@ class VirtualClock:
 # CLI fault spec:  "straggler=1*4@0.2,preempt=1@3+5,fail=1@30,hetero=0.3"
 # ----------------------------------------------------------------------------
 
+def _num(text: str, kind, what: str, clause: str):
+    """Parse one numeric field with an actionable error message."""
+    try:
+        return kind(text)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"fault clause {clause!r}: {what} must be a"
+            f"{'n integer' if kind is int else ' number'}, got {text!r}"
+        ) from None
+
+
+def _peer(text: str, n_peers: int, clause: str) -> int:
+    p = _num(text, int, "peer index", clause)
+    if p < 0:
+        raise ValueError(f"fault clause {clause!r}: peer index {p} is "
+                         "negative")
+    if p >= n_peers:
+        raise ValueError(f"fault clause {clause!r}: peer index {p} is out of "
+                         f"range for n_peers={n_peers} (valid: 0.."
+                         f"{n_peers - 1})")
+    return p
+
+
 def parse_faults(spec: str, n_peers: int, seed: int = 0) -> FaultConfig:
     """Parse the ``--faults`` flag into a :class:`FaultConfig`.
 
@@ -158,6 +197,10 @@ def parse_faults(spec: str, n_peers: int, seed: int = 0) -> FaultConfig:
       fail=P@S             peer P dies permanently at local step S
       speeds=A:B:...       explicit per-peer base seconds-per-step
       hetero=SIGMA         lognormal per-peer speed jitter
+
+    Malformed specs raise ``ValueError`` with the offending clause named:
+    negative durations/steps, out-of-range or duplicated peers (overlapping
+    windows on one peer), non-positive factors/speeds, unknown clause kinds.
     """
     kw: Dict = dict(n_peers=n_peers, seed=seed)
     stragglers, preempts, fails = [], [], []
@@ -169,22 +212,68 @@ def parse_faults(spec: str, n_peers: int, seed: int = 0) -> FaultConfig:
         if key == "straggler":
             head, _, fr = val.partition("@")
             p, _, f = head.partition("*")
-            stragglers.append(int(p))
-            factors.append(float(f) if f else 4.0)
-            fracs.append(float(fr) if fr else 0.2)
+            peer = _peer(p, n_peers, clause)
+            if peer in stragglers:
+                raise ValueError(
+                    f"fault clause {clause!r}: peer {peer} already has a "
+                    "straggler clause (episodes would silently overlap)")
+            factor = _num(f, float, "slowdown factor", clause) if f else 4.0
+            frac = _num(fr, float, "step fraction", clause) if fr else 0.2
+            if factor <= 0:
+                raise ValueError(f"fault clause {clause!r}: slowdown factor "
+                                 f"{factor} must be > 0")
+            if not 0.0 < frac <= 1.0:
+                raise ValueError(f"fault clause {clause!r}: step fraction "
+                                 f"{frac} must be in (0, 1]")
+            stragglers.append(peer)
+            factors.append(factor)
+            fracs.append(frac)
         elif key == "preempt":
             p, _, rest = val.partition("@")
             s, _, pause = rest.partition("+")
-            preempts.append((int(p), int(s), float(pause or 5.0)))
+            peer = _peer(p, n_peers, clause)
+            step = _num(s, int, "step", clause)
+            dur = _num(pause, float, "pause duration", clause) if pause else 5.0
+            if step < 0:
+                raise ValueError(f"fault clause {clause!r}: step {step} is "
+                                 "negative")
+            if dur <= 0:
+                raise ValueError(f"fault clause {clause!r}: pause duration "
+                                 f"{dur} must be > 0")
+            if any(q == peer and t == step for q, t, _ in preempts):
+                raise ValueError(
+                    f"fault clause {clause!r}: peer {peer} already has a "
+                    f"preemption at step {step} (overlapping windows on one "
+                    "peer)")
+            preempts.append((peer, step, dur))
         elif key == "fail":
             p, _, s = val.partition("@")
-            fails.append((int(p), int(s)))
+            peer = _peer(p, n_peers, clause)
+            step = _num(s, int, "step", clause)
+            if step < 0:
+                raise ValueError(f"fault clause {clause!r}: step {step} is "
+                                 "negative")
+            if any(q == peer for q, _ in fails):
+                raise ValueError(f"fault clause {clause!r}: peer {peer} "
+                                 "already has a failure clause (it can only "
+                                 "die once)")
+            fails.append((peer, step))
         elif key == "speeds":
-            kw["speeds"] = tuple(float(x) for x in val.split(":"))
+            speeds = tuple(_num(x, float, "speed", clause)
+                           for x in val.split(":"))
+            if any(sp <= 0 for sp in speeds):
+                raise ValueError(f"fault clause {clause!r}: speeds must all "
+                                 "be > 0")
+            kw["speeds"] = speeds
         elif key == "hetero":
-            kw["speed_sigma"] = float(val)
+            sigma = _num(val, float, "sigma", clause)
+            if sigma < 0:
+                raise ValueError(f"fault clause {clause!r}: sigma {sigma} is "
+                                 "negative")
+            kw["speed_sigma"] = sigma
         else:
-            raise ValueError(f"unknown fault clause {clause!r}")
+            raise ValueError(f"unknown fault clause {clause!r} (known: "
+                             "straggler, preempt, fail, speeds, hetero)")
     # FaultConfig carries ONE global factor/frac for all straggler peers —
     # refuse conflicting per-peer values rather than silently overriding
     if len(set(factors)) > 1 or len(set(fracs)) > 1:

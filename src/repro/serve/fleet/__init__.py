@@ -13,11 +13,18 @@ docs/serving.md for the architecture and the scenario catalog.
                   (``repro.kernels.paged_cache`` gather/scatter)
     router.py     peer routing (round-robin / least-loaded / ensemble),
                   canary divergence via ``distill_pair``, staleness-bounded
-                  keep-last weight refresh from checkpoint snapshots
+                  keep-last weight refresh from checkpoint snapshots,
+                  chaos defenses (health routing, migration, hedging,
+                  degraded admission)
+    chaos.py      seeded fault injection over the runtime's FaultSchedule
+                  (stragglers / preemption / failure+recovery on the
+                  fleet's decode-tick clock) — see docs/chaos.md
 """
 from repro.serve.fleet.batcher import (FleetConfig, FleetEngine,  # noqa: F401
                                        RequestRecord)
 from repro.serve.fleet.cache import PagedCachePool  # noqa: F401
+from repro.serve.fleet.chaos import (ChaosConfig, ChaosSchedule,  # noqa: F401
+                                     ChaosStats, FleetDefense, PeerHealth)
 from repro.serve.fleet.router import (FleetReport, FleetRouter,  # noqa: F401
                                       POLICIES)
 from repro.serve.fleet.workload import (SCENARIOS, Request,  # noqa: F401

@@ -22,6 +22,14 @@ reports are bit-reproducible across machines — wall-clock throughput is
 measured separately by ``benchmarks/serving.py``. Greedy decoding only: the
 fleet's testable invariant is temperature-0 token-identity with the dense
 engine.
+
+With a ``ChaosSchedule`` attached (``repro.serve.fleet.chaos``) each tick
+additionally consults the seeded fault schedule: the tick cost is scaled by
+the peer's slowdown, a scheduled preemption jumps the clock past the pause
+(in-flight slots frozen, KV intact), and a scheduled failure kills the
+engine at the start of the tick — a dead engine makes no progress until the
+router ``revive``s it. The clean path (no schedule) is bit-identical to the
+pre-chaos engine.
 """
 from __future__ import annotations
 
@@ -58,27 +66,40 @@ class FleetConfig:
 
 @dataclass
 class RequestRecord:
-    """Per-request lifecycle + output stream (the determinism surface)."""
+    """Per-request lifecycle + output stream (the determinism surface).
+
+    ``origin`` is set on migrated continuations: the CLIENT's request, whose
+    arrival anchors TTFT/E2E regardless of how many peers the work visited.
+    ``migrations`` counts placements beyond the first (on the logical,
+    client-facing record).
+    """
     request: Request
     canary: bool = False
     admitted_ms: Optional[float] = None
     first_token_ms: Optional[float] = None
     finished_ms: Optional[float] = None
     rejected: bool = False
+    cancelled: bool = False          # hedge loser / harvested off a peer
+    origin: Optional[Request] = None
+    migrations: int = 0
     tokens: List[int] = field(default_factory=list)
     prefill_logits: Optional[np.ndarray] = None   # kept for canary compares
+
+    @property
+    def _arrival0_ms(self) -> float:
+        return (self.origin or self.request).arrival_ms
 
     @property
     def ttft_ms(self) -> Optional[float]:
         if self.first_token_ms is None:
             return None
-        return self.first_token_ms - self.request.arrival_ms
+        return self.first_token_ms - self._arrival0_ms
 
     @property
     def e2e_ms(self) -> Optional[float]:
         if self.finished_ms is None:
             return None
-        return self.finished_ms - self.request.arrival_ms
+        return self.finished_ms - self._arrival0_ms
 
 
 @dataclass
@@ -113,12 +134,23 @@ class FleetEngine:
     """One peer's continuous batcher: paged pool + compile-once decode."""
 
     def __init__(self, model, params: PyTree, config: FleetConfig,
-                 cache_dtype=jnp.float32, keep_logits: bool = False):
+                 cache_dtype=jnp.float32, keep_logits: bool = False,
+                 peer_id: int = 0):
         self.model = model
         self.params = params
         self.config = config
         self.cache_dtype = cache_dtype
         self.keep_logits = keep_logits
+        self.peer_id = peer_id
+        # chaos hooks (None/untouched on the clean path)
+        self.chaos = None                # Optional[ChaosSchedule]
+        self.health = None               # Optional[PeerHealth]
+        self.dead = False
+        self._fail_fired = False         # scheduled permanent failure spent
+        self.died_at_ms: Optional[float] = None
+        self.offline_until_ms = 0.0
+        self.preemptions_hit = 0
+        self.max_queue_live = config.max_queue   # tightened when degraded
         self.pool = PagedCachePool(
             model, max_slots=config.max_slots, block_size=config.block_size,
             num_blocks=config.num_blocks,
@@ -165,14 +197,23 @@ class FleetEngine:
         return bool(self.slots or self.waiting or self.pending)
 
     def next_arrival_ms(self) -> Optional[float]:
-        return self.pending[0].request.arrival_ms if self.pending else None
+        # min over the whole deque: migration can append a continuation with
+        # an earlier arrival than harvested-in future requests, so the head
+        # is not guaranteed earliest (it is on the clean path)
+        if not self.pending:
+            return None
+        return min(r.request.arrival_ms for r in self.pending)
 
     # ---- the engine tick ---------------------------------------------------
     def _intake(self) -> None:
-        while self.pending and \
-                self.pending[0].request.arrival_ms <= self.now_ms:
+        # full rotation instead of head-only for the same reason as
+        # ``next_arrival_ms``; order-preserving, identical on the clean path
+        for _ in range(len(self.pending)):
             rec = self.pending.popleft()
-            if len(self.waiting) >= self.config.max_queue:
+            if rec.request.arrival_ms > self.now_ms:
+                self.pending.append(rec)
+                continue
+            if len(self.waiting) >= self.max_queue_live:
                 rec.rejected = True
                 self.rejected += 1
                 continue
@@ -256,6 +297,18 @@ class FleetEngine:
     def step(self) -> bool:
         """One engine tick; returns False when nothing could progress (the
         caller should jump the clock to the next arrival)."""
+        if self.dead:
+            return False
+        tick = self.steps
+        if self.chaos is not None and not self._fail_fired:
+            fail_tick = self.chaos.fails_at(self.peer_id)
+            if fail_tick is not None and tick >= fail_tick:
+                # a permanent failure fires exactly once: the tick counter
+                # keeps counting after a checkpoint-recovery rejoin, so the
+                # schedule must not re-kill the revived peer
+                self._fail_fired = True
+                self.die()
+                return False
         self._intake()
         admitted_tokens = self._admit()
         newly = {s for s, sl in self.slots.items()
@@ -268,6 +321,13 @@ class FleetEngine:
         cost = (self.config.step_overhead_ms
                 + self.config.prefill_ms_per_token * admitted_tokens
                 + (self.config.decode_ms_per_step if decoded else 0.0))
+        if self.chaos is not None:
+            mult = self.chaos.slowdown(self.peer_id, tick)
+            cost *= mult
+            if self.health is not None:
+                # the health signal IS the observed/clean cost ratio — what
+                # a real router would estimate from tick latencies
+                self.health.observe(mult)
         self.now_ms += cost
         for s in newly:
             self.slots[s].record.first_token_ms = self.now_ms
@@ -278,13 +338,25 @@ class FleetEngine:
         if self.config.defrag_every and \
                 self.steps % self.config.defrag_every == 0:
             self.pool.defrag()
+        if self.chaos is not None:
+            pause = self.chaos.pause_ms(self.peer_id, tick)
+            if pause > 0:
+                # preemption: clock jumps past the pause; slots stay frozen
+                # (no decode progress), the router sees offline_until_ms
+                self.offline_until_ms = self.now_ms + pause
+                self.now_ms = self.offline_until_ms
+                self.preemptions_hit += 1
         return True
 
     def advance_to(self, t_ms: float) -> None:
         """Run ticks until the clock reaches ``t_ms`` (or work runs dry,
-        in which case the clock jumps forward — idle time is free)."""
+        in which case the clock jumps forward — idle time is free). A dead
+        engine only follows the clock."""
         while self.now_ms < t_ms:
             if not self.step():
+                if self.dead:
+                    self.now_ms = t_ms
+                    break
                 nxt = self.next_arrival_ms()
                 self.now_ms = t_ms if nxt is None else min(t_ms,
                                                            max(nxt, self.now_ms))
@@ -294,7 +366,64 @@ class FleetEngine:
     def drain(self) -> None:
         while self.slots or self.waiting or self.pending:
             if not self.step():
+                if self.dead:
+                    break            # router harvests what's left
                 nxt = self.next_arrival_ms()
                 if nxt is None:
                     break
                 self.now_ms = max(self.now_ms, nxt)
+
+    # ---- chaos lifecycle (no-ops on the clean path) ------------------------
+    def die(self) -> None:
+        """Permanent failure: KV state is gone; records stay attached so the
+        router can harvest in-flight work for migration."""
+        self.dead = True
+        self.died_at_ms = self.now_ms
+
+    def revive(self, t_ms: float, params: Optional[PyTree] = None,
+               version: Optional[int] = None) -> None:
+        """Rejoin after a permanent failure, from recovered weights.
+
+        The router must have harvested the dead engine first — reviving
+        with live slots would silently resurrect stale KV state.
+        """
+        assert self.dead, "revive() on a live engine"
+        assert not self.slots and not self.waiting, \
+            "revive() before harvest(): in-flight work would be resurrected"
+        self.dead = False
+        self.died_at_ms = None
+        self.offline_until_ms = 0.0
+        self.now_ms = max(self.now_ms, t_ms)
+        if params is not None:
+            self.set_params(params)
+            if version is not None:
+                self.weights_version = version
+
+    def harvest(self) -> List[RequestRecord]:
+        """Strip every unfinished request (live slots, queued, future) for
+        re-routing, freeing their blocks. Deterministic order: slots by slot
+        id, then the waiting queue, then pending arrivals."""
+        out: List[RequestRecord] = []
+        for s in sorted(self.slots):
+            sl = self.slots.pop(s)
+            self.pool.free_slot(s)
+            out.append(sl.record)
+        out.extend(self.waiting)
+        self.waiting.clear()
+        out.extend(self.pending)
+        self.pending.clear()
+        for rec in out:
+            rec.cancelled = True
+        return out
+
+    def cancel(self, rec: RequestRecord) -> None:
+        """Remove one request wherever it sits (hedge loser / migration);
+        identity-based — records compare by value, two copies of one hedged
+        request must not alias."""
+        self.pending = deque(r for r in self.pending if r is not rec)
+        self.waiting = deque(r for r in self.waiting if r is not rec)
+        for s, sl in list(self.slots.items()):
+            if sl.record is rec:
+                del self.slots[s]
+                self.pool.free_slot(s)
+        rec.cancelled = True

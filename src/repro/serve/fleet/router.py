@@ -28,7 +28,20 @@ Weight refresh mirrors the async runtime mailbox's keep-last policy
 the peer's current weights is adopted (keep-last — never roll back), and a
 snapshot more than ``staleness_bound`` steps behind the newest available is
 dropped rather than adopted, exactly the mailbox's drop-vs-keep decision.
-Refreshes happen at tick boundaries (serving never blocks on a load).
+Refreshes happen at tick boundaries (serving never blocks on a load), and
+the bytes are billed once per ADOPTED snapshot through
+``core/comm_model.py``'s checkpoint-exchange event — the same ledger the
+training mailbox meters, so serving and training comm costs are directly
+comparable.
+
+Chaos (docs/chaos.md): with a :class:`ChaosConfig` the engines consult the
+runtime's seeded fault schedule on every tick, and with a
+:class:`FleetDefense` the router fights back — health-aware peer selection,
+migration of in-flight work off dead/preempted peers with at-most-once
+token emission, optional hedged dispatch of the slowest-decile requests,
+and degraded-mode admission control. Equal peers are what make every one
+of these defenses SOUND: any replica can continue any request. Without
+either config the run path is bit-identical to the pre-chaos router.
 """
 from __future__ import annotations
 
@@ -40,10 +53,14 @@ from typing import Any, Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.io import (load_snapshot_params, snapshot_meta)
+from repro.checkpoint.io import (has_snapshot, load_snapshot_params,
+                                 snapshot_meta)
 from repro.core.codistillation import distill_pair
-from repro.models.common import count_params
+from repro.core.comm_model import bits_per_exchange_event, param_bits_of
 from repro.serve.fleet.batcher import FleetConfig, FleetEngine, RequestRecord
+from repro.serve.fleet.chaos import (ChaosConfig, ChaosSchedule, ChaosStats,
+                                     FleetDefense, PeerHealth, _HedgePair,
+                                     _Orphan)
 from repro.serve.fleet.workload import Workload
 
 PyTree = Any
@@ -107,6 +124,17 @@ class FleetReport:
     peak_pool_utilization: float
     canary: Dict = field(default_factory=dict)
     stream_digest: str = ""          # sha256 over client token streams
+    # chaos accounting (zero on clean runs)
+    goodput_tokens_per_s: float = 0.0   # tokens of SLO-met completions
+    lost_tokens: int = 0             # completed streams short of max_new
+    duplicated_tokens: int = 0       # completed streams over max_new
+    migrations: int = 0
+    migration_failures: int = 0
+    hedges: int = 0
+    hedge_wins: int = 0
+    preemptions: int = 0
+    peers_died: int = 0
+    peers_recovered: int = 0
 
     def to_json(self) -> str:
         return json.dumps(self.__dict__, indent=1, sort_keys=True)
@@ -126,15 +154,18 @@ class FleetRouter:
                  canary_every: int = 0,
                  snapshot_dir: Optional[str] = None,
                  refresh_every_ms: float = 0.0,
-                 staleness_bound: int = 0):
+                 staleness_bound: int = 0,
+                 chaos: Optional[ChaosConfig] = None,
+                 defense: Optional[FleetDefense] = None):
         assert policy in POLICIES, (policy, POLICIES)
         assert len(peer_params) >= 1
         self.policy = policy
         self.config = config or FleetConfig()
         self.engines = [FleetEngine(model, p, self.config,
                                     cache_dtype=cache_dtype,
-                                    keep_logits=(policy == "ensemble"))
-                        for p in peer_params]
+                                    keep_logits=(policy == "ensemble"),
+                                    peer_id=i)
+                        for i, p in enumerate(peer_params)]
         self.canary_every = canary_every
         self.snapshot_dir = snapshot_dir
         self.refresh_every_ms = refresh_every_ms
@@ -142,8 +173,12 @@ class FleetRouter:
         self._next_refresh_ms = refresh_every_ms
         self._rr = 0
         self._since_canary = 0
-        self._param_bytes = sum(
-            count_params(p) * 4 for p in peer_params) // len(peer_params)
+        # one weight refresh moves one replica across the slow links — the
+        # n=2 checkpoint-exchange event of the Section-3 model (sender +
+        # this peer), billed ONCE per adopted snapshot by the keep-last
+        # guard below; tests/test_comm_model.py pins the ledger identity
+        self._param_bytes = int(bits_per_exchange_event(
+            "checkpoints", 2, b_model=param_bits_of(peer_params[0])) // 8)
         self.refresh_bytes = 0
         self.refreshes = 0
         self.refreshes_dropped_stale = 0
@@ -151,29 +186,90 @@ class FleetRouter:
         # (primary record, shadow record) pairs compared after the run
         self._pairs: List[tuple] = []
         self._primaries: List[RequestRecord] = []
+        # ---- chaos state ----
+        self.chaos = chaos
+        self.defense = defense
+        self.chaos_stats = ChaosStats()
+        if chaos is not None:
+            sched = ChaosSchedule(chaos)
+            for eng in self.engines:
+                eng.chaos = sched
+        if defense is not None:
+            for eng in self.engines:
+                eng.health = PeerHealth(alpha=defense.health_alpha)
+        self._death_seen = [False] * len(self.engines)
+        self._orphans: List[_Orphan] = []          # awaiting (re)placement
+        self._continuations: List[RequestRecord] = []   # live migrated copies
+        self._phys2logical: Dict[int, RequestRecord] = {}
+        self._hedge_pairs: List[_HedgePair] = []
+        self._hedge_by_id: Dict[int, _HedgePair] = {}
+        self._size_samples: List[int] = []
 
-    # ---- routing -----------------------------------------------------------
-    def _pick(self) -> int:
+    # ---- peer selection ----------------------------------------------------
+    def _available(self, t_ms: float) -> List[int]:
+        return [i for i, e in enumerate(self.engines)
+                if not e.dead and e.offline_until_ms <= t_ms]
+
+    def _healthy(self, t_ms: float) -> List[int]:
+        """Available peers whose tick-cost EWMA looks nominal; falls back to
+        any available peer when every one of them looks sick (serving from a
+        straggler beats not serving)."""
+        avail = self._available(t_ms)
+        if self.defense is None:
+            return avail
+        ok = [i for i in avail
+              if self.engines[i].health is None
+              or self.engines[i].health.healthy(self.defense.unhealthy_factor)]
+        return ok or avail
+
+    def _pick(self, t_ms: float) -> Optional[int]:
+        n = len(self.engines)
+        if self.defense is None:
+            # undefended: route blindly, dead peers included — this is the
+            # baseline the chaos benchmark measures the defenses against
+            cands = list(range(n))
+        else:
+            cands = self._healthy(t_ms)
+            if not cands:
+                return None
         if self.policy == "least_loaded":
-            loads = [e.load for e in self.engines]
-            return int(np.argmin(loads))     # ties -> lowest peer id
-        peer = self._rr % len(self.engines)
-        self._rr += 1
-        return peer
+            return min(cands, key=lambda i: (self.engines[i].load, i))
+        for _ in range(n):
+            peer = self._rr % n
+            self._rr += 1
+            if peer in cands:
+                return peer
+        return cands[0]
 
     def _route(self, request) -> None:
         n = len(self.engines)
+        t = request.arrival_ms
         if self.policy == "ensemble":
-            primary = self._rr % n
-            self._rr += 1
+            if self.defense is None:
+                avail = list(range(n))
+            else:
+                avail = self._available(t)
+                if not avail:
+                    self._no_capacity(request, t)
+                    return
+            for _ in range(n):
+                primary = self._rr % n
+                self._rr += 1
+                if primary in avail:
+                    break
             prec = self.engines[primary].enqueue(request)
             self._primaries.append(prec)
             for off in range(1, n):
-                srec = self.engines[(primary + off) % n].enqueue(
-                    request, canary=True)
+                peer = (primary + off) % n
+                if peer not in avail:
+                    continue
+                srec = self.engines[peer].enqueue(request, canary=True)
                 self._pairs.append((prec, srec))
             return
-        peer = self._pick()
+        peer = self._pick(t)
+        if peer is None:
+            self._no_capacity(request, t)
+            return
         prec = self.engines[peer].enqueue(request)
         self._primaries.append(prec)
         self._since_canary += 1
@@ -184,6 +280,47 @@ class FleetRouter:
             shadow = (peer + 1) % n
             srec = self.engines[shadow].enqueue(request, canary=True)
             self._pairs.append((prec, srec))
+        self._maybe_hedge(request, prec, peer)
+
+    def _no_capacity(self, request, t_ms: float) -> None:
+        """Every peer is dead or offline at arrival."""
+        alive = [i for i, e in enumerate(self.engines) if not e.dead]
+        rec = RequestRecord(request)
+        if self.defense is not None and alive:
+            # park: the orphan machinery places it when a peer returns
+            self._primaries.append(rec)
+            self._orphans.append(_Orphan(rec, t_ms))
+            return
+        if alive:
+            # undefended: queue on whichever peer comes back soonest
+            peer = min(alive, key=lambda i: (self.engines[i].offline_until_ms,
+                                             i))
+            self._primaries.append(self.engines[peer].enqueue(request))
+            return
+        rec.rejected = True
+        self._primaries.append(rec)
+
+    def _maybe_hedge(self, request, prec: RequestRecord, ppeer: int) -> None:
+        d = self.defense
+        if not (d and d.hedging and len(self.engines) > 1):
+            return
+        self._size_samples.append(request.total_tokens)
+        if len(self._size_samples) <= d.hedge_min_samples:
+            return
+        thr = float(np.quantile(np.asarray(self._size_samples[:-1],
+                                           np.float64), d.hedge_quantile))
+        if request.total_tokens < thr:
+            return
+        cands = [i for i in self._healthy(request.arrival_ms) if i != ppeer]
+        if not cands:
+            return
+        hpeer = min(cands, key=lambda i: (self.engines[i].load, i))
+        hrec = self.engines[hpeer].enqueue(request)
+        pair = _HedgePair(prec, hrec, ppeer, hpeer)
+        self._hedge_pairs.append(pair)
+        self._hedge_by_id[id(prec)] = pair
+        self._hedge_by_id[id(hrec)] = pair
+        self.chaos_stats.hedges += 1
 
     # ---- weight refresh (keep-last, staleness-bounded) ---------------------
     def refresh_now(self) -> int:
@@ -220,15 +357,239 @@ class FleetRouter:
             self._next_refresh_ms += periods * self.refresh_every_ms
             self.refresh_now()
 
+    # ---- migration / hedging / recovery maintenance ------------------------
+    def _logical_of(self, rec: RequestRecord) -> RequestRecord:
+        """Resolve a harvested physical record to its client-facing record,
+        folding any partial progress into it first."""
+        logical = self._phys2logical.pop(id(rec), None)
+        if logical is None:
+            return rec               # the original placement
+        if rec in self._continuations:
+            self._continuations.remove(rec)
+        self._fold(logical, rec)
+        return logical
+
+    @staticmethod
+    def _fold(logical: RequestRecord, phys: RequestRecord) -> None:
+        """Merge a continuation's progress into the client-facing record.
+        Tokens already on ``logical`` were emitted BEFORE this placement —
+        extending preserves at-most-once emission."""
+        logical.tokens.extend(phys.tokens)
+        if logical.admitted_ms is None:
+            logical.admitted_ms = phys.admitted_ms
+        if logical.first_token_ms is None:
+            logical.first_token_ms = phys.first_token_ms
+        if phys.finished_ms is not None:
+            logical.finished_ms = phys.finished_ms
+            logical.cancelled = False
+
+    def _queue_migration(self, logical: RequestRecord, t_ms: float) -> None:
+        if len(logical.tokens) >= logical.request.max_new:
+            # every output token was already emitted: effectively complete
+            logical.finished_ms = logical.finished_ms or t_ms
+            logical.cancelled = False
+            return
+        backoff = (0.0 if logical.migrations == 0 else
+                   self.defense.retry_backoff_ms
+                   * (2 ** (logical.migrations - 1)))
+        self._orphans.append(_Orphan(logical, t_ms + backoff))
+
+    def _absorb_harvested(self, recs: List[RequestRecord],
+                          t_ms: float) -> None:
+        for rec in recs:
+            pair = self._hedge_by_id.get(id(rec))
+            if pair is not None:
+                if rec is pair.rec:
+                    pair.palive = False
+                else:
+                    pair.halive = False
+                if pair.palive or pair.halive:
+                    continue         # the surviving copy carries the request
+                # both copies gone: hedging delivered nothing (whole-response
+                # semantics), so restart the client record from scratch
+                self._unhedge(pair)
+                logical = pair.rec
+                logical.tokens.clear()
+                logical.admitted_ms = None
+                logical.first_token_ms = None
+            else:
+                logical = self._logical_of(rec)
+            self._queue_migration(logical, t_ms)
+
+    def _unhedge(self, pair: _HedgePair) -> None:
+        self._hedge_pairs.remove(pair)
+        self._hedge_by_id.pop(id(pair.rec), None)
+        self._hedge_by_id.pop(id(pair.hrec), None)
+
+    def _sweep_continuations(self, t_ms: float) -> None:
+        for prec in list(self._continuations):
+            logical = self._phys2logical[id(prec)]
+            if prec.rejected:
+                # target queue shed the continuation: back off, try again
+                self._continuations.remove(prec)
+                del self._phys2logical[id(prec)]
+                self._queue_migration(logical, t_ms)
+            elif prec.finished_ms is not None:
+                self._continuations.remove(prec)
+                del self._phys2logical[id(prec)]
+                self._fold(logical, prec)
+
+    def _resolve_hedges(self, t_ms: float) -> None:
+        for pair in list(self._hedge_pairs):
+            prec, hrec = pair.rec, pair.hrec
+            if pair.palive and prec.rejected:
+                pair.palive = False  # admission shed == copy death
+            if pair.halive and hrec.rejected:
+                pair.halive = False
+            pwin = pair.palive and prec.finished_ms is not None
+            hwin = pair.halive and hrec.finished_ms is not None
+            if pwin and (not hwin or prec.finished_ms <= hrec.finished_ms):
+                if pair.halive and hrec.finished_ms is None:
+                    self.engines[pair.hpeer].cancel(hrec)
+                self._unhedge(pair)
+            elif hwin:
+                if pair.palive and prec.finished_ms is None:
+                    self.engines[pair.ppeer].cancel(prec)
+                # first winner answers the client: substitute wholesale
+                # (nothing was delivered from the loser — whole-response
+                # hedging never rewinds the client stream)
+                prec.tokens[:] = hrec.tokens
+                prec.admitted_ms = hrec.admitted_ms
+                prec.first_token_ms = hrec.first_token_ms
+                prec.finished_ms = hrec.finished_ms
+                prec.rejected = False
+                prec.cancelled = False
+                self.chaos_stats.hedge_wins += 1
+                self._unhedge(pair)
+            elif not pair.palive and not pair.halive:
+                # both copies rejected at admission: the shed stands
+                self._unhedge(pair)
+
+    def _sweep_peers(self, t_ms: float) -> None:
+        migrate = self.defense is not None and self.defense.migration
+        for i, eng in enumerate(self.engines):
+            if eng.dead and not self._death_seen[i]:
+                self._death_seen[i] = True
+                self.chaos_stats.peers_died += 1
+                if migrate:
+                    self._absorb_harvested(eng.harvest(), t_ms)
+            elif (migrate and not eng.dead and eng.has_work()
+                  and eng.offline_until_ms - t_ms
+                  > self.defense.migrate_pause_over_ms):
+                # preempted for longer than the timeout: treat like a death
+                # for the work's sake (the peer itself will return)
+                self._absorb_harvested(eng.harvest(), t_ms)
+
+    def _revive_due(self, t_ms: float) -> None:
+        cz = self.chaos
+        if cz is None or cz.recover_after_ms <= 0:
+            return
+        for i, eng in enumerate(self.engines):
+            if not eng.dead or t_ms < eng.died_at_ms + cz.recover_after_ms:
+                continue
+            if not (self.defense is not None and self.defense.migration):
+                eng.harvest()        # undefended: the doomed work is dropped
+            params = version = None
+            if self.snapshot_dir and has_snapshot(self.snapshot_dir, i):
+                params = load_snapshot_params(self.snapshot_dir, i,
+                                              eng.params)
+                meta = snapshot_meta(self.snapshot_dir, i) or {}
+                version = meta.get("step")
+                # recovery pulls one replica across the slow links: bill it
+                # to the same checkpoint-exchange ledger as a refresh
+                self.refresh_bytes += self._param_bytes
+            eng.revive(t_ms, params, version)
+            if eng.health is not None:
+                eng.health.ewma = 1.0    # fresh machine, fresh prior
+            self._death_seen[i] = False
+            self.chaos_stats.peers_recovered += 1
+
+    def _retry_orphans(self, t_ms: float) -> None:
+        for orph in list(self._orphans):
+            if orph.next_attempt_ms > t_ms:
+                continue
+            logical: RequestRecord = orph.rec
+            if logical.migrations >= self.defense.max_migrations:
+                self._orphans.remove(orph)
+                self.chaos_stats.migration_failures += 1
+                logical.rejected = True
+                continue
+            cands = self._healthy(t_ms)
+            if not cands:
+                orph.next_attempt_ms = t_ms + self.defense.retry_backoff_ms
+                continue
+            peer = min(cands, key=lambda i: (self.engines[i].load, i))
+            req0 = logical.request
+            cont = req0.continuation(tuple(logical.tokens),
+                                     max(req0.arrival_ms, t_ms))
+            new_rec = self.engines[peer].enqueue(cont)
+            new_rec.origin = req0
+            self._phys2logical[id(new_rec)] = logical
+            self._continuations.append(new_rec)
+            logical.migrations += 1
+            self.chaos_stats.migrations += 1
+            self._orphans.remove(orph)
+
+    def _update_admission(self, t_ms: float) -> None:
+        if not (self.defense is not None and self.defense.degraded_admission):
+            return
+        n = len(self.engines)
+        up = len(self._available(t_ms))
+        q = max(1, int(self.config.max_queue * up / n)) if up else 1
+        for eng in self.engines:
+            eng.max_queue_live = q
+
+    def _chaos_maintenance(self, t_ms: float) -> None:
+        self._sweep_continuations(t_ms)
+        self._resolve_hedges(t_ms)
+        self._sweep_peers(t_ms)
+        self._revive_due(t_ms)
+        if self.defense is not None:
+            self._retry_orphans(t_ms)
+        self._update_admission(t_ms)
+
+    def _drain_chaos(self) -> None:
+        """Drain in bounded time quanta so deaths, revivals, migrations and
+        hedge resolutions keep happening after the last arrival."""
+        quantum = (self.defense.maintenance_quantum_ms
+                   if self.defense is not None else 20.0)
+        guard = 0
+        while guard < 200_000:
+            guard += 1
+            alive = [e for e in self.engines if not e.dead]
+            recovering = (self.chaos is not None
+                          and self.chaos.recover_after_ms > 0
+                          and any(e.dead for e in self.engines))
+            work = any(e.has_work() for e in alive)
+            placing = bool(self._orphans or self._continuations
+                           or self._hedge_pairs)
+            if not work and not placing and not (recovering and self._orphans):
+                break
+            if not alive and not recovering:
+                break                # nothing can ever progress again
+            t = max(e.now_ms for e in self.engines) + quantum
+            for e in self.engines:
+                e.advance_to(t)
+            self._chaos_maintenance(t)
+        # stragglers that finished on the final quantum
+        end = max(e.now_ms for e in self.engines)
+        self._chaos_maintenance(end)
+
     # ---- the run loop ------------------------------------------------------
     def run(self, workload: Workload, slo_ms: float = 50.0) -> FleetReport:
+        chaosy = self.chaos is not None or self.defense is not None
         for req in sorted(workload.requests, key=lambda r: r.arrival_ms):
             self._maybe_refresh(req.arrival_ms)
             for eng in self.engines:
                 eng.advance_to(req.arrival_ms)
+            if chaosy:
+                self._chaos_maintenance(req.arrival_ms)
             self._route(req)
-        for eng in self.engines:
-            eng.drain()
+        if chaosy:
+            self._drain_chaos()
+        else:
+            for eng in self.engines:
+                eng.drain()
         end_ms = max((eng.now_ms for eng in self.engines), default=0.0)
         self._maybe_refresh(end_ms)
         for prec, srec in self._pairs:
@@ -241,10 +602,13 @@ class FleetRouter:
         ttfts = [r.ttft_ms for r in done]
         e2es = [r.e2e_ms for r in done]
         gen = sum(len(r.tokens) for r in done)
+        good = sum(len(r.tokens) for r in done
+                   if r.ttft_ms is not None and r.ttft_ms <= slo_ms)
         digest = hashlib.sha256()
         for r in sorted(self._primaries, key=lambda r: r.request.rid):
             digest.update(bytes(f"{r.request.rid}:", "ascii"))
             digest.update(np.asarray(r.tokens, np.int32).tobytes())
+        cs = self.chaos_stats
         return FleetReport(
             scenario=workload.scenario,
             router=self.policy,
@@ -269,4 +633,17 @@ class FleetRouter:
                                       for e in self.engines),
             canary=self.canary_stats.summary(),
             stream_digest=digest.hexdigest(),
+            goodput_tokens_per_s=(good / (end_ms / 1e3) if end_ms > 0
+                                  else 0.0),
+            lost_tokens=sum(max(0, r.request.max_new - len(r.tokens))
+                            for r in done),
+            duplicated_tokens=sum(max(0, len(r.tokens) - r.request.max_new)
+                                  for r in done),
+            migrations=cs.migrations,
+            migration_failures=cs.migration_failures,
+            hedges=cs.hedges,
+            hedge_wins=cs.hedge_wins,
+            preemptions=sum(e.preemptions_hit for e in self.engines),
+            peers_died=cs.peers_died,
+            peers_recovered=cs.peers_recovered,
         )

@@ -31,6 +31,22 @@ class Request:
     def prompt_len(self) -> int:
         return len(self.prompt)
 
+    @property
+    def total_tokens(self) -> int:
+        """Worst-case context (prompt + full output) — the slot reservation
+        size, and the 'work size' the hedging policy ranks requests by."""
+        return self.prompt_len + self.max_new
+
+    def continuation(self, emitted: Tuple[int, ...], at_ms: float) -> "Request":
+        """The request that resumes THIS one on another peer after migration:
+        already-emitted output tokens become prompt context (they were
+        already delivered to the client — at-most-once emission), and only
+        the remainder of the output budget is decoded. Same ``rid``: the
+        client sees one logical request."""
+        assert len(emitted) < self.max_new, (self.rid, len(emitted))
+        return Request(self.rid, at_ms, self.prompt + tuple(emitted),
+                       self.max_new - len(emitted))
+
 
 @dataclass(frozen=True)
 class LengthMix:

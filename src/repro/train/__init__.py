@@ -29,15 +29,3 @@ from repro.train.state import (  # noqa: F401
     init_peer_state,
     init_train_state,
 )
-# Deprecated step factories (repro.train.steps) resolve lazily so merely
-# importing repro.train stays warning-free; touching one emits the steps
-# module's DeprecationWarning.
-_DEPRECATED_STEPS = ("make_allreduce_step", "make_codist_checkpoint_step",
-                     "make_codist_pipelined_step", "make_codist_step")
-
-
-def __getattr__(name: str):
-    if name in _DEPRECATED_STEPS:
-        from repro.train import steps
-        return getattr(steps, name)
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

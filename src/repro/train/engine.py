@@ -41,8 +41,8 @@ Concrete strategies:
   ShardMapCompressed    beyond-paper: explicit ``shard_map`` over the "pod"
                         axis so only the compressed wire crosses pods
 
-The legacy factories (``make_codist_step`` et al. in ``train.steps``) are
-thin deprecation aliases over this module.
+The legacy step factories (``make_codist_step`` et al.) were removed after
+every caller migrated here; this module is the only way to build steps.
 """
 from __future__ import annotations
 

@@ -134,3 +134,45 @@ def test_async_scheduler_meters_match_event_model():
                                             b_pred=b_pred_k, batch=b) / 8.0
     assert rep_k.comm_bytes == pytest.approx(rep_k.comm_events * expected_k)
     assert rep_k.comm_bytes < rep.comm_bytes / 10
+
+
+def test_fleet_refresh_bills_through_checkpoint_event_model():
+    """Serving and training share one comm ledger: the router's weight
+    refresh bills exactly one n=2 checkpoint-exchange event per ADOPTED
+    snapshot (keep-last metering — repeat polls of the same snapshot bill
+    nothing), with b_model measured from the live params."""
+    from dataclasses import replace
+
+    import jax
+
+    from repro.checkpoint.io import save_snapshot
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.serve.fleet import FleetConfig, FleetRouter
+
+    cfg = replace(get_reduced("qwen1.5-0.5b"), num_layers=1, d_model=32,
+                  d_ff=64, vocab_size=64, num_heads=2, num_kv_heads=2,
+                  head_dim=16)
+    model = build_model(cfg)
+    p = model.init(jax.random.key(0))
+    per_refresh = cm.bits_per_exchange_event(
+        "checkpoints", 2, b_model=cm.param_bits_of(p)) / 8.0
+    import tempfile
+    with tempfile.TemporaryDirectory() as snap:
+        save_snapshot(snap, 0, {"params": p}, meta={"step": 4})
+        fc = FleetConfig(max_slots=1, block_size=4, num_blocks=16,
+                         max_blocks_per_slot=4)
+        router = FleetRouter(model, [p, p], config=fc, snapshot_dir=snap)
+        assert router.refresh_now() == 1
+        # bill-once: polling the unchanged directory adopts (and bills) nothing
+        assert router.refresh_now() == 0
+        assert router.refresh_now() == 0
+        assert router.refreshes == 1
+        assert router.refresh_bytes == pytest.approx(per_refresh)
+        # a genuinely newer snapshot bills exactly one more event
+        save_snapshot(snap, 0, {"params": p}, meta={"step": 9})
+        assert router.refresh_now() == 1
+        assert router.refresh_bytes == pytest.approx(2 * per_refresh)
+    # the event model agrees with the fp32 byte count of the raw params
+    from repro.models.common import count_params
+    assert per_refresh == count_params(p) * 4

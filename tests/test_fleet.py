@@ -16,8 +16,10 @@ from dataclasses import replace
 from repro.checkpoint.io import save_snapshot
 from repro.configs import CodistConfig, TrainConfig, get_reduced
 from repro.models import build_model
+from repro.runtime import FaultConfig
 from repro.serve import Engine
-from repro.serve.fleet import (FleetConfig, FleetRouter, Request, SCENARIOS,
+from repro.serve.fleet import (ChaosConfig, FleetConfig, FleetDefense,
+                               FleetRouter, Request, SCENARIOS,
                                generate_workload)
 
 
@@ -329,7 +331,7 @@ def test_checkpoint_roundtrip_codist_to_fleet(tmp_path):
 
 
 # ----------------------------------------------------------------------------
-# deprecation satellite: steps modules warn on import, repro.train does not
+# removal satellite: the deprecated step-factory modules are gone for good
 # ----------------------------------------------------------------------------
 
 def _run_py(code):
@@ -340,27 +342,181 @@ def _run_py(code):
                           capture_output=True, text=True, env=env)
 
 
-def test_deprecated_step_modules_warn_on_import():
-    # fresh interpreter per module: the warning fires once, at import time
-    # (the error filter is installed after jax/repro.train, so only the
-    # deprecated module's own warning can trip it)
+def test_deprecated_step_modules_are_gone():
+    """PR 5 migrated every caller to ``build_train_step``; the alias modules
+    and the lazy ``repro.train.__getattr__`` shim are now deleted. Importing
+    them must fail cleanly, and the package must not resurrect the names."""
     for mod in ("repro.train.steps", "repro.train.shardmap_step"):
-        r = _run_py(
-            "import warnings, repro.train\n"
-            "warnings.simplefilter('error', DeprecationWarning)\n"
-            f"import {mod}\n")
-        assert r.returncode != 0 and "DeprecationWarning" in r.stderr, \
-            f"{mod} must emit DeprecationWarning on import:\n{r.stderr}"
+        r = _run_py(f"import {mod}\n")
+        assert r.returncode != 0 and "ModuleNotFoundError" in r.stderr, \
+            f"{mod} should no longer exist:\n{r.stderr}"
 
 
 def test_train_package_import_stays_warning_free():
-    """Importing repro.train (and using the engine API) must NOT touch the
-    deprecated modules — the lazy __getattr__ keeps them out of the hot
-    import path, so only genuinely legacy callers see the warning."""
+    """Importing repro.train (and touching a removed legacy name) raises a
+    plain AttributeError under ``-W error::DeprecationWarning`` — the tier-1
+    posture CI runs with."""
     r = _run_py(
-        "import jax, sys, warnings\n"
+        "import warnings\n"
         "warnings.simplefilter('error', DeprecationWarning)\n"
         "import repro.train\n"
-        "assert 'repro.train.steps' not in sys.modules\n"
-        "assert 'repro.train.shardmap_step' not in sys.modules\n")
+        "try:\n"
+        "    repro.train.make_codist_step\n"
+        "except AttributeError:\n"
+        "    pass\n"
+        "else:\n"
+        "    raise SystemExit('legacy name still resolves')\n")
     assert r.returncode == 0, r.stderr
+
+
+# ----------------------------------------------------------------------------
+# chaos: seeded faults on the decode-tick clock + the router defenses
+# (docs/chaos.md) — the acceptance pins: at-most-once token emission under
+# preemption + migration, failover + snapshot recovery, bit-determinism
+# ----------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def chaos_fleet():
+    """One tiny model + params shared by the chaos tests (the compiled
+    decode/prefill cache is weak-keyed on the model, so sharing it keeps
+    these from recompiling per test)."""
+    cfg = _tiny_cfg()
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.key(0))
+
+
+def _chaos_fc(max_queue=32):
+    return FleetConfig(max_slots=2, block_size=4, num_blocks=32,
+                       max_blocks_per_slot=8, max_queue=max_queue)
+
+
+def test_preemption_migration_at_most_once(chaos_fleet):
+    """Peer 1 is preempted mid-run; the defended router migrates its
+    in-flight work to peer 0 by re-prefilling prompt+emitted. The client
+    streams must be IDENTICAL to a clean run (identical peers): zero lost,
+    zero duplicated tokens — and the whole thing bit-deterministic."""
+    cfg, model, p = chaos_fleet
+    reqs = _requests(cfg, [5, 9, 12, 7] * 4, max_new=5, gap_ms=4.0)
+    wl = _ListWorkload(reqs)
+    chaos = ChaosConfig(FaultConfig(n_peers=2, seed=0,
+                                    preemptions=((1, 6, 150.0),)))
+    clean = FleetRouter(model, [p, p], config=_chaos_fc()).run(wl)
+    assert clean.completed == len(reqs) and clean.rejected == 0
+
+    reps = [FleetRouter(model, [p, p], config=_chaos_fc(), chaos=chaos,
+                        defense=FleetDefense()).run(wl) for _ in range(2)]
+    rep = reps[0]
+    assert rep.completed == len(reqs) and rep.rejected == 0
+    assert rep.preemptions == 1
+    assert rep.migrations >= 1
+    assert rep.lost_tokens == 0 and rep.duplicated_tokens == 0
+    # at-most-once emission, pinned at token level: continuation prefill
+    # reproduces exactly the stream the preempted decode would have made
+    assert rep.stream_digest == clean.stream_digest
+    # bit-deterministic across two seeded runs (the CI chaos-smoke gate)
+    assert reps[0].to_json() == reps[1].to_json()
+
+
+def test_peer_failure_migration_and_snapshot_recovery(tmp_path, chaos_fleet):
+    """Peer 1 dies permanently: defended routing migrates its work (nothing
+    lost) and, with recover_after_ms + a snapshot, revives it from
+    checkpoint. The undefended fleet strands the dead peer's requests."""
+    cfg, model, p = chaos_fleet
+    reqs = _requests(cfg, [5, 9, 12, 7] * 5, max_new=5, gap_ms=4.0)
+    wl = _ListWorkload(reqs)
+    snap = str(tmp_path / "snaps")
+    save_snapshot(snap, 1, {"params": p}, meta={"step": 7})
+    faults = FaultConfig(n_peers=2, seed=0, failures=((1, 8),))
+
+    rep = FleetRouter(
+        model, [p, p], config=_chaos_fc(), snapshot_dir=snap,
+        chaos=ChaosConfig(faults, recover_after_ms=30.0),
+        defense=FleetDefense()).run(wl)
+    assert rep.peers_died == 1 and rep.peers_recovered == 1
+    assert rep.migrations >= 1
+    assert rep.completed == len(reqs)
+    assert rep.lost_tokens == 0 and rep.duplicated_tokens == 0
+
+    router_u = FleetRouter(model, [p, p], config=_chaos_fc(),
+                           chaos=ChaosConfig(faults))
+    rep_u = router_u.run(wl)
+    assert rep_u.peers_died == 1 and rep_u.migrations == 0
+    assert rep_u.completed < len(reqs)      # stranded on the dead peer
+    # weights version proves recovery came from the step-7 snapshot
+    assert rep.completed - rep_u.completed >= 1
+
+
+def test_recovered_peer_adopts_snapshot_weights(tmp_path, chaos_fleet):
+    cfg, model, p = chaos_fleet
+    p1 = model.init(jax.random.key(9))
+    snap = str(tmp_path / "snaps")
+    save_snapshot(snap, 1, {"params": p1}, meta={"step": 7})
+    router = FleetRouter(
+        model, [p, p], config=_chaos_fc(), snapshot_dir=snap,
+        chaos=ChaosConfig(FaultConfig(n_peers=2, seed=0, failures=((1, 4),)),
+                          recover_after_ms=20.0),
+        defense=FleetDefense())
+    reqs = _requests(cfg, [5, 7] * 8, max_new=4, gap_ms=5.0)
+    router.run(_ListWorkload(reqs))
+    assert router.engines[1].weights_version == 7
+    got = jax.tree.leaves(router.engines[1].params)[0]
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jax.tree.leaves(p1)[0]))
+
+
+def test_degraded_admission_tightens_queue_bounds(chaos_fleet):
+    """With half the peers gone, per-peer queue bounds halve (shed at the
+    edge instead of queueing unservable work) and recover with capacity."""
+    cfg, model, p = chaos_fleet
+    fc = _chaos_fc(max_queue=8)
+    router = FleetRouter(model, [p, p], config=fc, defense=FleetDefense())
+    router._chaos_maintenance(0.0)
+    assert all(e.max_queue_live == 8 for e in router.engines)
+    router.engines[1].die()
+    router._chaos_maintenance(1.0)
+    assert all(e.max_queue_live == 4 for e in router.engines)
+    router.engines[1].harvest()
+    router.engines[1].revive(2.0)
+    router._chaos_maintenance(3.0)
+    assert all(e.max_queue_live == 8 for e in router.engines)
+
+
+def test_hedged_dispatch_first_winner_cancels(chaos_fleet):
+    """Slowest-decile requests run on two peers; the winner answers the
+    client and the loser is cancelled — streams stay identical to the
+    unhedged run (identical peers) with nothing lost or duplicated."""
+    cfg, model, p = chaos_fleet
+    reqs = _requests(cfg, [5, 5, 5, 5, 12, 5, 5, 12, 5, 5], max_new=5,
+                     gap_ms=4.0)
+    wl = _ListWorkload(reqs)
+    clean = FleetRouter(model, [p, p], config=_chaos_fc()).run(wl)
+    defense = FleetDefense(hedging=True, hedge_quantile=0.7,
+                           hedge_min_samples=3)
+    router = FleetRouter(model, [p, p], config=_chaos_fc(), defense=defense)
+    rep = router.run(wl)
+    assert rep.hedges >= 1
+    assert rep.completed == len(reqs) and rep.rejected == 0
+    assert rep.lost_tokens == 0 and rep.duplicated_tokens == 0
+    assert rep.stream_digest == clean.stream_digest
+    assert not router._hedge_pairs           # every pair resolved
+    assert all(not e.slots and not e.waiting for e in router.engines)
+
+
+def test_straggler_health_routing_beats_undefended(chaos_fleet):
+    """PR 3's straggler schedule on the fleet clock: EWMA health routing
+    steers arrivals off the slow peer, so the defended tail latency must
+    beat the undefended round_robin tail. Both bit-deterministic."""
+    cfg, model, p = chaos_fleet
+    reqs = _requests(cfg, [5, 9, 12, 7] * 6, max_new=5, gap_ms=2.0)
+    wl = _ListWorkload(reqs)
+    chaos = ChaosConfig(FaultConfig(n_peers=2, seed=0, straggler_peers=(1,),
+                                    straggler_factor=4.0,
+                                    straggler_frac=0.2))
+    rep_u = [FleetRouter(model, [p, p], config=_chaos_fc(),
+                         chaos=chaos).run(wl) for _ in range(2)]
+    rep_d = FleetRouter(model, [p, p], config=_chaos_fc(), chaos=chaos,
+                        defense=FleetDefense(migration=False)).run(wl)
+    assert rep_u[0].to_json() == rep_u[1].to_json()   # replayable chaos
+    assert rep_d.completed == len(reqs)
+    assert rep_d.p99_ttft_ms <= rep_u[0].p99_ttft_ms
+    assert rep_d.slo_attainment >= rep_u[0].slo_attainment

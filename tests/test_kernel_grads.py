@@ -1,8 +1,8 @@
 """Gradient parity of the custom-VJP fused losses vs the jnp references,
 plus the structural guarantee the tentpole is about: with ``fused_losses``
 enabled, no (T, V)-shaped fp32 temporary exists in the loss computation in
-either direction (verified by jaxpr inspection), and every step variant in
-train/steps.py runs end-to-end on the fused path.
+either direction (verified by jaxpr inspection), and every exchange
+strategy's step runs end-to-end on the fused path.
 
 All kernels run in interpret=True mode (CPU container); tolerance <=1e-4.
 """

@@ -130,6 +130,51 @@ def test_parse_faults_roundtrip():
         parse_faults("bogus=1", 2)
 
 
+def test_parse_faults_rejects_malformed_specs():
+    """Every malformed clause gets an actionable ValueError naming the
+    clause — never a silent misparse."""
+    cases = {
+        "preempt=1@3+-5": "pause duration",       # negative duration
+        "preempt=1@3+0": "pause duration",        # zero-length pause
+        "preempt=1@-3+5": "negative",             # negative step
+        "fail=1@-2": "negative",
+        "straggler=1*-4@0.2": "slowdown factor",  # non-positive factor
+        "straggler=1*4@0": "step fraction",       # frac outside (0, 1]
+        "straggler=1*4@1.5": "step fraction",
+        "straggler=3*4@0.2": "out of range",      # peer >= n_peers
+        "preempt=-1@3+5": "negative",             # negative peer
+        "fail=x@3": "peer index",                 # non-numeric peer
+        "preempt=1@here+5": "must be an integer", # non-numeric step
+        "melt=1": "unknown fault clause",         # unknown kind
+        "speeds=1.0:0": "must all be > 0",
+        "hetero=-0.5": "negative",
+    }
+    for spec, needle in cases.items():
+        with pytest.raises(ValueError, match=needle):
+            parse_faults(spec, 2)
+        with pytest.raises(ValueError) as exc:
+            parse_faults(spec, 2)
+        # the offending clause is named, so a bad flag is findable in a
+        # comma-separated pile of clauses
+        assert spec.split(",")[0].split("=")[0] in str(exc.value)
+
+
+def test_parse_faults_rejects_overlapping_windows():
+    # two preemptions on one peer at the same step would silently collapse
+    # into one dict entry
+    with pytest.raises(ValueError, match="overlapping"):
+        parse_faults("preempt=1@3+5,preempt=1@3+9", 2)
+    # distinct steps on one peer are fine
+    f = parse_faults("preempt=1@3+5,preempt=1@9+5", 2)
+    assert f.preemptions == ((1, 3, 5.0), (1, 9, 5.0))
+    # a peer can only die once
+    with pytest.raises(ValueError, match="only die once"):
+        parse_faults("fail=1@3,fail=1@9", 2)
+    # duplicate straggler clause on one peer would overlap episodes
+    with pytest.raises(ValueError, match="overlap"):
+        parse_faults("straggler=1*4@0.2,straggler=1*4@0.2", 2)
+
+
 # ----------------------------------------------------------------------------
 # staleness-bound 0 == the synchronous prediction exchange
 # ----------------------------------------------------------------------------

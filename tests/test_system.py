@@ -142,6 +142,48 @@ class TestCheckpointIO:
         b = jax.tree.leaves(restored.params)[0]
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
+    def test_save_is_atomic_no_temp_residue(self, tmp_path):
+        """save writes via temp + os.replace: only the final names exist
+        afterwards, and re-saving over a snapshot never exposes a partial
+        file (the chaos recovery path loads these mid-'crash')."""
+        import os
+
+        from repro.checkpoint import save_pytree
+        tree = {"w": np.arange(6, dtype=np.float32)}
+        path = str(tmp_path / "snap")
+        save_pytree(path, tree, meta={"step": 1})
+        save_pytree(path, {"w": np.ones(6, np.float32)}, meta={"step": 2})
+        names = sorted(os.listdir(tmp_path))
+        assert names == ["snap.npz", "snap.tree.json"], names  # no .tmp files
+
+    def test_corrupt_snapshot_raises_clear_error(self, tmp_path):
+        """A truncated/garbage payload must raise an actionable ValueError,
+        not restore garbage weights into a serving peer."""
+        from repro.checkpoint import load_pytree, save_pytree
+        from repro.checkpoint.io import load_snapshot_params, save_snapshot
+        tree = {"w": np.arange(6, dtype=np.float32),
+                "b": np.zeros(3, np.float32)}
+        path = str(tmp_path / "snap")
+        save_pytree(path, tree)
+        with open(path + ".npz", "wb") as f:
+            f.write(b"not a zipfile")
+        with pytest.raises(ValueError, match="corrupt or unreadable"):
+            load_pytree(path, tree)
+        # truncation to a prefix of the real bytes must also be caught
+        save_pytree(path, tree)
+        raw = open(path + ".npz", "rb").read()
+        with open(path + ".npz", "wb") as f:
+            f.write(raw[: len(raw) // 2])
+        with pytest.raises(ValueError, match="corrupt or unreadable"):
+            load_pytree(path, tree)
+        # and the peer-snapshot path used by fleet refresh/recovery
+        save_snapshot(str(tmp_path), 0, tree, meta={"step": 3})
+        snap = str(tmp_path / "peer0.npz")
+        with open(snap, "wb") as f:
+            f.write(b"\x00" * 16)
+        with pytest.raises(ValueError, match="delete it"):
+            load_snapshot_params(str(tmp_path), 0, tree)
+
 
 class TestCoordinatedSampling:
     def test_same_key_same_batch(self):

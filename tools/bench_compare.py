@@ -27,7 +27,8 @@ Exit codes: 0 clean, 1 regression(s) (a readable table says which), 2
 usage error (missing/empty files, no comparable rows). To bless a new
 baseline after an intentional change, regenerate it and commit:
 
-    PYTHONPATH=src python -m benchmarks.run --only throughput,fault,sweep_smoke,serving \\
+    PYTHONPATH=src python -m benchmarks.run \\
+        --only throughput,fault,sweep_smoke,serving,serving_chaos \\
         --quick --json BENCH_throughput.json
 
 (see docs/experiments.md for when a re-bless is legitimate). This script
@@ -162,8 +163,8 @@ def main(argv: Optional[List[str]] = None) -> int:
               "comm_bytes).")
         print("If the change is intentional, bless a new baseline:\n"
               "    PYTHONPATH=src python -m benchmarks.run "
-              "--only throughput,fault,sweep_smoke,serving --quick "
-              "--json BENCH_throughput.json")
+              "--only throughput,fault,sweep_smoke,serving,serving_chaos "
+              "--quick --json BENCH_throughput.json")
         return 1
     print(f"\nOK: {len(records)} row(s) within tolerance "
           f"({args.tolerance:.0%} timing, exact comm_bytes).")

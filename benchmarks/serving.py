@@ -1,6 +1,7 @@
 """Serving-fleet benchmark: p50/p99 latency, tokens/sec and SLO attainment
 per workload scenario, through the full continuous-batching stack (paged KV
-pool, admission control, peer router).
+pool, admission control, peer router) — plus decode-kernel rows for the
+fused paged-attention path.
 
 One row per (scenario, router) cell on a tiny LM. ``us_per_call`` is WALL
 time per generated token (informational on CPU interpret mode — gated only
@@ -11,6 +12,15 @@ serving side's deterministic traffic accounting) is matched EXACTLY by
 ``tools/bench_compare.py``, so a scheduling / allocation / workload change
 that silently alters fleet behavior fails CI the same way a train-side
 comm change does.
+
+The ``serving/decode_*`` rows time one batched decode step (wall us, same
+caveat) over a fixed ragged slot population and account its per-tick decode
+HBM traffic ANALYTICALLY: the fused kernel reads each live KV block exactly
+once (plus the per-row fp32 scales when quantized), while the jnp oracle
+additionally writes AND re-reads the dense ``(S, MB*BS, KVh, hd)`` gather
+temporary. ``comm_bytes`` carries the exact per-tick byte count per
+variant, so a change that silently reintroduces the gather temporary (or
+alters what the kernel reads) fails the bench gate.
 """
 from __future__ import annotations
 
@@ -18,10 +28,12 @@ import time
 from typing import Dict, List
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.serve.fleet import FleetConfig, FleetRouter, generate_workload
 
-from benchmarks.common import tiny_lm_cfg
+from benchmarks.common import timed, tiny_lm_cfg
 
 SEED = 17
 CELLS = [
@@ -60,5 +72,65 @@ def run(quick: bool = False) -> List[Dict]:
                         f"completed={rep.completed},"
                         f"digest={rep.stream_digest[:12]},"
                         f"comm_bytes={comm}"),
+        })
+    rows.extend(_decode_rows(model, quick))
+    return rows
+
+
+# one fixed ragged slot population for the decode-kernel rows: 4 live slots
+# spanning empty-context to every-block-live
+_DECODE_LENGTHS = [2, 6, 11, 15]
+_DECODE_POOL = dict(max_slots=4, block_size=4, num_blocks=32,
+                    max_blocks_per_slot=8)
+
+
+def _decode_rows(model, quick: bool) -> List[Dict]:
+    """Decode-latency + per-token HBM-bytes rows for the fused
+    paged-attention kernel vs the jnp gather oracle, per cache dtype."""
+    from repro.kernels.paged_cache import is_quantized_dtype
+    from repro.serve.fleet.cache import PagedCachePool
+    from repro.serve.fleet.model_exec import build_decode_step
+
+    cfg = model.cfg
+    params = model.init(jax.random.key(SEED))
+    variants = [("fused_fp32", jnp.float32, True),
+                ("oracle_fp32", jnp.float32, False),
+                ("fused_int8", jnp.int8, True)]
+    rows: List[Dict] = []
+    for name, dtype, fused in variants:
+        pool = PagedCachePool(model, cache_dtype=dtype, **_DECODE_POOL)
+        for s, ln in enumerate(_DECODE_LENGTHS):
+            pool.allocate(s, ln + 2)     # covers the append position too
+            pool.lengths[s] = ln
+        wslot, woff = pool.write_maps(np.ones(pool.max_slots, bool))
+        step = build_decode_step(model, fused_attention=fused)
+        args = (params, pool.kv, pool.states, jnp.asarray(pool.table),
+                jnp.asarray(pool.lengths), jnp.asarray(wslot),
+                jnp.asarray(woff),
+                jnp.zeros((pool.max_slots, 1), jnp.int32))
+        _, us = timed(step, *args, warmup=1, iters=2 if quick else 5)
+
+        # analytic per-tick decode HBM traffic (exact, deterministic):
+        bs = pool.block_size
+        n_attn = len(pool.kv_subs) * pool.n_scan
+        row_b = cfg.num_kv_heads * cfg.resolved_head_dim \
+            * jnp.dtype(dtype).itemsize
+        live = sum((ln + bs) // bs for ln in _DECODE_LENGTHS)
+        # each live block read exactly once, K and V, every attn sublayer
+        kv_read = live * bs * row_b * 2 * n_attn
+        if is_quantized_dtype(dtype):
+            kv_read += live * bs * 4 * 2 * n_attn    # fp32 scale rows
+        # the oracle also writes + re-reads the dense gather temporary
+        temp = (pool.max_slots * pool.max_blocks_per_slot * bs
+                * row_b * 2 * n_attn)
+        total = kv_read if fused else kv_read + 2 * temp
+        toks = len(_DECODE_LENGTHS)
+        rows.append({
+            "name": f"serving/decode_{name}",
+            "us_per_call": us,
+            "derived": (f"kv_read_per_tok={kv_read // toks},"
+                        f"gather_temp_bytes={0 if fused else temp},"
+                        f"live_blocks={live},"
+                        f"comm_bytes={total}"),
         })
     return rows

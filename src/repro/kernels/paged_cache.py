@@ -20,10 +20,19 @@ Two kernels move data between the pool and the decode step:
       step, -1 = untouched) makes every output block written exactly once,
       so the update needs no atomics and no partially-covered outputs.
 
-Both use ``PrefetchScalarGridSpec``: the table / write maps are scalar-
-prefetched so the index maps can compute DMA sources before the body runs.
-Interpret mode on CPU, Mosaic on TPU (``auto_interpret``), with jnp oracles
-(``*_ref``) pinned against the kernels in tests/test_kernels.py.
+Quantized pools (``cache_dtype`` int8 / fp8) store one fp32 scale per
+token row alongside the pool in a ``(num_blocks, block_size)`` array:
+``paged_scatter_quant`` is the fused scatter variant that computes the
+row's absmax scale and quantizes INSIDE the kernel (one pass, nothing
+dequantized in HBM), and ``quantize_rows`` is the jnp row quantizer the
+pool uses at prefill-insert time. Scale 0 (the null block, never written)
+dequantizes to exactly 0, so the null-block invariant extends to scales.
+
+All kernels use ``PrefetchScalarGridSpec``: the table / write maps are
+scalar-prefetched so the index maps can compute DMA sources before the body
+runs. Interpret mode on CPU, Mosaic on TPU (``auto_interpret``), with jnp
+oracles (``*_ref``) pinned against the kernels in tests/test_kernels.py and
+tests/test_paged_attention.py.
 """
 from __future__ import annotations
 
@@ -144,3 +153,113 @@ def paged_scatter_ref(pool: jax.Array, new: jax.Array, write_slot: jax.Array,
     mask = (write_slot >= 0)[:, None] & (rows == write_off[:, None])  # (NB,BS)
     src = new.astype(pool.dtype)[jnp.clip(write_slot, 0)]             # (NB,KV,hd)
     return jnp.where(mask[..., None, None], src[:, None], pool)
+
+
+# ----------------------------------------------------------------------------
+# quantized pools: per-row fp32 scales, fused quantize-at-scatter
+# ----------------------------------------------------------------------------
+
+# absmax of the representable range per quantized cache dtype
+_QMAX = {"int8": 127.0, "float8_e4m3fn": 448.0}
+
+
+def is_quantized_dtype(dtype) -> bool:
+    """True for the quantized KV-pool dtypes (int8 / fp8)."""
+    return jnp.dtype(dtype).name in _QMAX
+
+
+def quantized_dtype_names():
+    return tuple(sorted(_QMAX))
+
+
+def _quantize(x: jax.Array, inv_scale: jax.Array, dtype) -> jax.Array:
+    """fp32 -> quantized storage given the reciprocal row scale (already
+    broadcast against x). int8 rounds-to-even then clips; fp8 is a plain
+    dtype conversion (values are in range by construction of the scale)."""
+    y = x.astype(jnp.float32) * inv_scale
+    if jnp.dtype(dtype).name == "int8":
+        return jnp.clip(jnp.round(y), -127.0, 127.0).astype(jnp.int8)
+    return y.astype(dtype)
+
+
+def quantize_rows(x: jax.Array, dtype):
+    """Quantize ``x (..., KV, hd)`` with one fp32 absmax scale per leading
+    index (a "row" = one stored token position across all KV heads).
+    Returns ``(q, scales)`` with ``scales = x.shape[:-2]``; all-zero rows
+    get scale 0 (and dequantize to exactly 0)."""
+    qmax = _QMAX[jnp.dtype(dtype).name]
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-2, -1))
+    scales = absmax / qmax
+    inv = jnp.where(scales > 0, 1.0 / jnp.maximum(scales, 1e-30), 0.0)
+    return _quantize(x, inv[..., None, None], dtype), scales
+
+
+def _scatter_quant_kernel(wslot_ref, woff_ref, new_ref, pool_ref, sc_ref,
+                          out_ref, osc_ref, *, block_size: int, qmax: float,
+                          out_dtype):
+    b = pl.program_id(0)
+    w = wslot_ref[b]
+    off = woff_ref[b]
+    src = pl.load(new_ref, (pl.dslice(jnp.maximum(w, 0), 1),
+                            slice(None), slice(None)))      # (1, KV, hd)
+    src = src.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(src))
+    scale = absmax / qmax
+    inv = jnp.where(scale > 0, 1.0 / jnp.maximum(scale, 1e-30), 0.0)
+    qrow = _quantize(src, inv, out_dtype)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block_size, 1, 1), 0)
+    mask = (rows == off) & (w >= 0)
+    out_ref[0] = jnp.where(mask, qrow, pool_ref[0])
+    rows2 = jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1)
+    mask2 = (rows2 == off) & (w >= 0)
+    osc_ref[...] = jnp.where(mask2, scale, sc_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_scatter_quant(pool: jax.Array, scales: jax.Array, new: jax.Array,
+                        write_slot: jax.Array, write_off: jax.Array,
+                        interpret: Optional[bool] = None):
+    """``paged_scatter`` fused with row quantization: the appended fp32 KV
+    row is absmax-scaled and stored quantized, its scale written into the
+    ``(NB, BS)`` per-row scale array. Returns ``(pool, scales)``.
+    Same writer-map contract as ``paged_scatter``."""
+    if interpret is None:
+        from repro.kernels.ops import auto_interpret
+        interpret = auto_interpret()
+    nb, bs, kv, hd = pool.shape
+    s = new.shape[0]
+    qmax = _QMAX[jnp.dtype(pool.dtype).name]
+    return pl.pallas_call(
+        functools.partial(_scatter_quant_kernel, block_size=bs, qmax=qmax,
+                          out_dtype=pool.dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(nb,),
+            in_specs=[
+                pl.BlockSpec((s, kv, hd), lambda b, ws, wo: (0, 0, 0)),
+                pl.BlockSpec((1, bs, kv, hd), lambda b, ws, wo: (b, 0, 0, 0)),
+                pl.BlockSpec((1, bs), lambda b, ws, wo: (b, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, bs, kv, hd), lambda b, ws, wo: (b, 0, 0, 0)),
+                pl.BlockSpec((1, bs), lambda b, ws, wo: (b, 0)),
+            ],
+        ),
+        out_shape=[jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+                   jax.ShapeDtypeStruct(scales.shape, jnp.float32)],
+        interpret=interpret,
+    )(write_slot.astype(jnp.int32), write_off.astype(jnp.int32),
+      new.astype(jnp.float32), pool, scales.astype(jnp.float32))
+
+
+def paged_scatter_quant_ref(pool: jax.Array, scales: jax.Array,
+                            new: jax.Array, write_slot: jax.Array,
+                            write_off: jax.Array):
+    """jnp oracle for ``paged_scatter_quant``."""
+    nb, bs, _, _ = pool.shape
+    rows = jnp.arange(bs)[None, :]
+    mask = (write_slot >= 0)[:, None] & (rows == write_off[:, None])  # (NB,BS)
+    src = new[jnp.clip(write_slot, 0)]                                # (NB,KV,hd)
+    qrow, sc = quantize_rows(src, pool.dtype)                         # (NB,), ...
+    out = jnp.where(mask[..., None, None], qrow[:, None], pool)
+    return out, jnp.where(mask, sc[:, None], scales.astype(jnp.float32))

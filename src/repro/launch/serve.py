@@ -44,7 +44,15 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--cache-dtype", default="auto",
                     help="KV/state cache dtype: auto (bf16 on TPU, fp32 in "
-                         "interpret mode), bf16, fp16, fp32")
+                         "interpret mode), bf16, fp16, fp32, or a quantized "
+                         "paged-pool dtype — int8, fp8/float8_e4m3fn "
+                         "(fleet mode only; per-row fp32 scales, dequantized "
+                         "inside the decode kernel)")
+    ap.add_argument("--fused-attention", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="decode attention path: the fused paged-attention "
+                         "kernel (auto/on; Mosaic on TPU, interpret on CPU) "
+                         "or the jnp gather+dense-softmax oracle (off)")
     ap.add_argument("--max-new", type=int, default=16)
     # ---- fleet mode ----
     ap.add_argument("--peers", type=int, default=2,
@@ -102,6 +110,10 @@ def main() -> None:
     cache_dtype = resolve_cache_dtype(args.cache_dtype)
 
     if args.single:
+        from repro.kernels.paged_cache import is_quantized_dtype
+        if is_quantized_dtype(cache_dtype):
+            ap.error(f"--cache-dtype {args.cache_dtype} is a quantized "
+                     "paged-pool dtype: fleet mode only (drop --single)")
         return _single(args, cfg, model, cache_dtype)
     if cfg.is_encdec or cfg.num_patches or not hasattr(model, "decode"):
         import sys
@@ -117,7 +129,9 @@ def main() -> None:
                      num_blocks=args.num_blocks,
                      max_blocks_per_slot=max(
                          1, -(-(args.max_prompt + args.max_new)
-                              // args.block_size)))
+                              // args.block_size)),
+                     fused_attention={"auto": None, "on": True,
+                                      "off": False}[args.fused_attention])
     chaos = defense = None
     if args.faults and args.faults != "none":
         chaos = ChaosConfig(

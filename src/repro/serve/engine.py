@@ -33,15 +33,24 @@ def default_cache_dtype():
 
 
 def resolve_cache_dtype(name: Optional[str]):
-    """CLI spelling -> dtype; None/'auto' defers to the backend default."""
+    """CLI spelling -> dtype; None/'auto' defers to the backend default.
+
+    Quantized spellings (``int8``, ``fp8``/``float8_e4m3fn``) resolve to
+    paged-pool storage dtypes — only the fleet engine serves them (the
+    dense ``Engine`` cache is never quantized); fp8 needs a jax with
+    ``jnp.float8_e4m3fn``.
+    """
     if name is None or name == "auto":
         return default_cache_dtype()
     table = {"bf16": jnp.bfloat16, "bfloat16": jnp.bfloat16,
              "fp32": jnp.float32, "float32": jnp.float32,
-             "fp16": jnp.float16, "float16": jnp.float16}
+             "fp16": jnp.float16, "float16": jnp.float16,
+             "int8": jnp.int8}
+    if hasattr(jnp, "float8_e4m3fn"):
+        table["fp8"] = table["float8_e4m3fn"] = jnp.float8_e4m3fn
     if name not in table:
         raise ValueError(f"unknown cache dtype {name!r}; "
-                         f"known: auto, {', '.join(table)}")
+                         f"valid names: auto, {', '.join(table)}")
     return table[name]
 
 
@@ -57,10 +66,17 @@ class GenerationResult:
 
 class Engine:
     def __init__(self, model, params: PyTree, cache_dtype=None):
+        from repro.kernels.paged_cache import is_quantized_dtype
         self.model = model
         self.params = params
         self.cache_dtype = (default_cache_dtype() if cache_dtype is None
                             else cache_dtype)
+        if is_quantized_dtype(self.cache_dtype):
+            raise ValueError(
+                f"cache_dtype {jnp.dtype(self.cache_dtype).name} is a "
+                "quantized paged-pool dtype: only the fleet engine "
+                "(repro.serve.fleet) serves quantized KV — the dense "
+                "Engine cache supports bf16/fp16/fp32")
         self._prefill = jax.jit(self._prefill_impl, static_argnums=(2,))
         self._decode = jax.jit(self._decode_impl)
 

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.paged_cache import is_quantized_dtype
 from repro.serve.fleet.cache import PagedCachePool
 from repro.serve.fleet.model_exec import build_decode_step
 from repro.serve.fleet.workload import Request
@@ -58,6 +59,9 @@ class FleetConfig:
     max_queue: int = 256             # admission control: beyond this, shed
     max_prefills_per_step: int = 2   # prefill/decode interleaving knob
     defrag_every: int = 0            # engine steps; 0 = never
+    # None/True: fused paged-attention decode kernel (Mosaic on TPU,
+    # interpret on CPU); False: the jnp gather+dense-softmax oracle
+    fused_attention: Optional[bool] = None
     # deterministic simulated cost model (ms)
     prefill_ms_per_token: float = 0.2
     decode_ms_per_step: float = 1.5
@@ -117,14 +121,19 @@ class _Slot:
 _EXEC_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
 
-def _shared_exec(model, cache_dtype):
+def _shared_exec(model, cache_dtype, fused_attention=None):
     per_model = _EXEC_CACHE.setdefault(model, {})
-    key = jnp.dtype(cache_dtype).name
+    key = (jnp.dtype(cache_dtype).name, fused_attention)
     if key not in per_model:
+        # quantized pools are quantized at INSERT time (scatter-quant /
+        # quantize_rows): prefill itself must run with a full-precision
+        # cache so there are exact rows to quantize
+        prefill_dtype = (jnp.float32 if is_quantized_dtype(cache_dtype)
+                         else cache_dtype)
         per_model[key] = (
-            build_decode_step(model),
+            build_decode_step(model, fused_attention=fused_attention),
             jax.jit(lambda p, b, cap: model.prefill(p, b, cap,
-                                                    cache_dtype=cache_dtype),
+                                                    cache_dtype=prefill_dtype),
                     static_argnums=(2,)),
         )
     return per_model[key]
@@ -156,7 +165,8 @@ class FleetEngine:
             num_blocks=config.num_blocks,
             max_blocks_per_slot=config.max_blocks_per_slot,
             cache_dtype=cache_dtype)
-        self._decode, self._prefill = _shared_exec(model, cache_dtype)
+        self._decode, self._prefill = _shared_exec(
+            model, cache_dtype, config.fused_attention)
         self.now_ms = 0.0
         self.steps = 0
         self.weights_version = -1        # bumped by router weight refresh
@@ -172,9 +182,11 @@ class FleetEngine:
         self.peak_utilization = 0.0
         cfg = model.cfg
         n_attn = len(self.pool.kv_subs) * self.pool.n_scan
-        self._kv_bytes_per_token = int(
-            n_attn * 2 * cfg.num_kv_heads * cfg.resolved_head_dim
-            * jnp.dtype(cache_dtype).itemsize)
+        per_row = (cfg.num_kv_heads * cfg.resolved_head_dim
+                   * jnp.dtype(cache_dtype).itemsize)
+        if self.pool.quantized:
+            per_row += 4             # one fp32 scale per stored row
+        self._kv_bytes_per_token = int(n_attn * 2 * per_row)
 
     # ---- intake ------------------------------------------------------------
     def set_params(self, params: PyTree) -> None:

@@ -11,6 +11,17 @@ are O(1) per slot and live in dense ``(n_scan, max_slots, ...)`` state
 buffers. Block 0 is the reserved null block: never allocated, all dead table
 entries point at it (see ``repro.kernels.paged_cache``).
 
+Quantized ``cache_dtype`` (int8 / fp8): the pools store quantized rows plus
+per-row fp32 scales in ``k_scale`` / ``v_scale`` ``(n_scan, NB, BS)``
+arrays held alongside ``k`` / ``v`` in the same per-sublayer dict — they
+ride the exact same allocate / defrag / scatter plumbing (a scale row is
+just more per-block payload), and the decode kernel dequantizes in its
+inner loop. Prefill rows are quantized here at insert time
+(``quantize_rows``); decode appends are quantized inside the fused
+``paged_scatter_quant`` kernel. Recurrent states stay at fp32 when the KV
+pool is quantized (they are O(1) per slot — nothing to win, and recurrent
+dynamics are precision-sensitive).
+
 Allocation is deterministic (lowest-index free blocks first) so seeded fleet
 runs are bit-reproducible. ``defrag()`` compacts live blocks to the lowest
 indices — with table indirection fragmentation never breaks correctness, but
@@ -25,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.paged_cache import is_quantized_dtype, quantize_rows
 from repro.models.transformer import _init_sub_cache, _n_scan, _sub_kinds
 
 PyTree = Any
@@ -43,27 +55,39 @@ class PagedCachePool:
         self.num_blocks = num_blocks          # includes the null block 0
         self.max_blocks_per_slot = max_blocks_per_slot
         self.cache_dtype = cache_dtype
+        self.quantized = is_quantized_dtype(cache_dtype)
         self.kinds = _sub_kinds(cfg)
         self.n_scan = _n_scan(cfg)
 
         kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
         self.kv_subs = [i for i, (m, _f) in enumerate(self.kinds)
                         if m == "attn"]
-        # device state: paged KV per attention sublayer...
-        self.kv: Dict[str, Dict[str, jax.Array]] = {
-            f"sub{i}": {
+
+        # device state: paged KV per attention sublayer (quantized pools
+        # carry per-row fp32 scales alongside)...
+        def pools():
+            d = {
                 "k": jnp.zeros((self.n_scan, num_blocks, block_size, kv, hd),
                                cache_dtype),
                 "v": jnp.zeros((self.n_scan, num_blocks, block_size, kv, hd),
                                cache_dtype),
-            } for i in self.kv_subs}
+            }
+            if self.quantized:
+                d["k_scale"] = jnp.zeros(
+                    (self.n_scan, num_blocks, block_size), jnp.float32)
+                d["v_scale"] = jnp.zeros(
+                    (self.n_scan, num_blocks, block_size), jnp.float32)
+            return d
+        self.kv: Dict[str, Dict[str, jax.Array]] = {
+            f"sub{i}": pools() for i in self.kv_subs}
         # ...and dense per-slot recurrent states for the rest
+        state_dtype = jnp.float32 if self.quantized else cache_dtype
         rec_subs = [(i, m) for i, (m, _f) in enumerate(self.kinds)
                     if m != "attn"]
         if rec_subs:
             def one(_):
                 return {f"sub{i}": _init_sub_cache(cfg, m, max_slots, 1,
-                                                   cache_dtype)
+                                                   state_dtype)
                         for i, m in rec_subs}
             self.states: PyTree = jax.vmap(one)(jnp.arange(self.n_scan))
         else:
@@ -123,6 +147,11 @@ class PagedCachePool:
                 src = cache[f"sub{i}"][name][:, 0]            # (n_scan, L, kv, hd)
                 src = jnp.pad(src, ((0, 0), (0, pad), (0, 0), (0, 0)))
                 src = src.reshape(self.n_scan, nb, bs, *src.shape[2:])
+                if self.quantized:
+                    src, scales = quantize_rows(src, self.cache_dtype)
+                    self.kv[f"sub{i}"][f"{name}_scale"] = (
+                        self.kv[f"sub{i}"][f"{name}_scale"].at[:, ids]
+                        .set(scales))
                 self.kv[f"sub{i}"][name] = (
                     self.kv[f"sub{i}"][name].at[:, ids]
                     .set(src.astype(self.cache_dtype)))
@@ -164,7 +193,7 @@ class PagedCachePool:
                              - set(perm[:used].tolist()))
         perm_j = jnp.asarray(perm, jnp.int32)
         for i in self.kv_subs:
-            for name in ("k", "v"):
+            for name in self.kv[f"sub{i}"]:     # k/v pools AND scale rows
                 self.kv[f"sub{i}"][name] = self.kv[f"sub{i}"][name][:, perm_j]
         for s in range(self.max_slots):
             self.slot_blocks[s] = [remap[b] for b in self.slot_blocks[s]]

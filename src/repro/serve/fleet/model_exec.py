@@ -7,20 +7,36 @@ position (= its current context length) — the ragged substrate continuous
 batching needs. Recurrent sublayers (mamba / rwkv) reuse the model's
 ``_sublayer_decode`` unchanged (their state is position-free).
 
-Numerics are kept identical to the dense engine path: same projections, same
-fp32 masked softmax, same cache-dtype handling — masked (dead / padded)
-slots contribute exactly 0 after ``exp(NEG - max)`` underflow, so per-slot
-logits match single-request ``Engine.generate`` decode and greedy streams
-are token-identical (the fleet-vs-engine parity pinned in tests/test_fleet.py).
+Two attention paths, numerically pinned against each other:
+
+* ``fused_attention=False`` — the jnp oracle: ``paged_gather`` a dense
+  ``(S, MB*BS, KVh, hd)`` context, dense fp32 masked softmax. Same
+  projections, same fp32 softmax as the dense engine path — masked (dead /
+  padded) slots contribute exactly 0 after ``exp(NEG - max)`` underflow, so
+  per-slot logits match single-request ``Engine.generate`` decode and
+  greedy streams are token-identical (the fleet-vs-engine parity pinned in
+  tests/test_fleet.py).
+* ``fused_attention=True`` (the default) — the
+  ``repro.kernels.paged_attention`` streaming-softmax kernel consumes the
+  block table directly: the gather temporary never exists and each live KV
+  block is read exactly once (Mosaic on TPU, interpret on CPU — the usual
+  ``auto_interpret`` convention). Logits parity vs the oracle is <=1e-4 at
+  fp32 cache dtype (tests/test_paged_attention.py).
+
+Quantized pools (``cache_dtype`` int8/fp8) append through the fused
+``paged_scatter_quant`` (quantize-at-scatter) and dequantize per-row inside
+whichever attention path runs.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.paged_cache import paged_gather, paged_scatter
+from repro.kernels.paged_attention import paged_attention_decode
+from repro.kernels.paged_cache import (paged_gather, paged_scatter,
+                                       paged_scatter_quant)
 from repro.models import attention as attn
 from repro.models.common import apply_norm, embed_tokens, lm_head
 from repro.models.ffn import ffn_forward
@@ -33,26 +49,50 @@ PyTree = Any
 def _paged_attention_decode(p: Dict, x: jax.Array, kv: Dict[str, jax.Array],
                             table: jax.Array, lengths: jax.Array,
                             write_slot: jax.Array, write_off: jax.Array,
-                            cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+                            cfg, fused: bool
+                            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token decode for every slot against its paged context.
 
-    x (S,1,d); kv {"k","v"}: (NB,BS,KVh,hd) pools for THIS layer; table
-    (S,MB); lengths (S,) = each slot's context length == the new token's
-    absolute position; write_slot/write_off (NB,) from
-    ``PagedCachePool.write_maps`` (inactive slots appear in no map entry,
-    so they never touch the pool).
+    x (S,1,d); kv {"k","v"[,"k_scale","v_scale"]}: (NB,BS,KVh,hd) pools for
+    THIS layer (plus (NB,BS) fp32 row scales when quantized); table (S,MB);
+    lengths (S,) = each slot's context length == the new token's absolute
+    position; write_slot/write_off (NB,) from ``PagedCachePool.write_maps``
+    (inactive slots appear in no map entry, so they never touch the pool).
     """
+    quantized = "k_scale" in kv
     bs = kv["k"].shape[1]
     positions = lengths[:, None]                       # (S,1) per-slot pos
     q, k_new, v_new = attn._project_qkv(p, x, cfg)
     q = attn.apply_rope(q, positions, cfg.rope_theta)
     k_new = attn.apply_rope(k_new, positions, cfg.rope_theta)
 
-    k_pool = paged_scatter(kv["k"], k_new[:, 0], write_slot, write_off)
-    v_pool = paged_scatter(kv["v"], v_new[:, 0], write_slot, write_off)
+    if quantized:
+        k_pool, k_sc = paged_scatter_quant(kv["k"], kv["k_scale"],
+                                           k_new[:, 0], write_slot, write_off)
+        v_pool, v_sc = paged_scatter_quant(kv["v"], kv["v_scale"],
+                                           v_new[:, 0], write_slot, write_off)
+        kv_out = {"k": k_pool, "v": v_pool,
+                  "k_scale": k_sc, "v_scale": v_sc}
+    else:
+        k_pool = paged_scatter(kv["k"], k_new[:, 0], write_slot, write_off)
+        v_pool = paged_scatter(kv["v"], v_new[:, 0], write_slot, write_off)
+        k_sc = v_sc = None
+        kv_out = {"k": k_pool, "v": v_pool}
+
+    if fused:
+        o = paged_attention_decode(q[:, 0], k_pool, v_pool, table, lengths,
+                                   k_scale=k_sc, v_scale=v_sc)  # (S, H, hd)
+        out = attn._out_proj(p, o[:, None].astype(x.dtype))
+        return out, kv_out
+
     n_live = (lengths + bs) // bs                      # blocks incl. new token
     k = paged_gather(k_pool, table, n_live)            # (S, MB*BS, KVh, hd)
     v = paged_gather(v_pool, table, n_live)
+    if quantized:
+        ks = paged_gather(k_sc[..., None, None], table, n_live)  # (S,T,1,1)
+        vs = paged_gather(v_sc[..., None, None], table, n_live)
+        k = (k.astype(jnp.float32) * ks).astype(x.dtype)
+        v = (v.astype(jnp.float32) * vs).astype(x.dtype)
 
     scores = attn._gqa_scores(q, k)                    # (S, H, 1, MB*BS)
     slot_pos = jnp.arange(k.shape[1])
@@ -60,14 +100,14 @@ def _paged_attention_decode(p: Dict, x: jax.Array, kv: Dict[str, jax.Array],
     scores = jnp.where(valid, scores, attn.NEG_INF)
     w = attn._softmax(scores).astype(x.dtype)
     out = attn._out_proj(p, attn._gqa_combine(w, v))
-    return out, {"k": k_pool, "v": v_pool}
+    return out, kv_out
 
 
 def _attn_sublayer(p: Dict, x: jax.Array, kv, table, lengths, write_slot,
-                   write_off, cfg, ffn_kind: str):
+                   write_off, cfg, ffn_kind: str, fused: bool):
     h = apply_norm(p["norm1"], x, cfg.norm_eps)
     h, kv = _paged_attention_decode(p["mix"], h, kv, table, lengths,
-                                    write_slot, write_off, cfg)
+                                    write_slot, write_off, cfg, fused)
     x = x + h
     h2 = apply_norm(p["norm2"], x, cfg.norm_eps)
     if ffn_kind == "moe":
@@ -77,15 +117,19 @@ def _attn_sublayer(p: Dict, x: jax.Array, kv, table, lengths, write_slot,
     return x + h2, kv
 
 
-def build_decode_step(model):
+def build_decode_step(model, fused_attention: Optional[bool] = None):
     """Compile-once batched decode: (params, kv, states, table, lengths,
     write_slot, write_off, tokens) -> (logits (S,V), kv, states).
 
-    All operands have step-invariant shapes, so the returned jit compiles
-    exactly once per fleet engine and every scheduler tick reuses it.
+    ``fused_attention`` None/True (the default) runs the
+    ``kernels.paged_attention`` streaming-softmax kernel; False pins the
+    jnp gather+dense-softmax oracle. All operands have step-invariant
+    shapes, so the returned jit compiles exactly once per fleet engine and
+    every scheduler tick reuses it.
     """
     cfg = model.cfg
     kinds = _sub_kinds(cfg)
+    fused = True if fused_attention is None else bool(fused_attention)
 
     def step(params, kv, states, table, lengths, write_slot, write_off,
              tokens):
@@ -103,7 +147,7 @@ def build_decode_step(model):
                 if m == "attn":
                     h, kv_out[name] = _attn_sublayer(
                         lp[name], h, kv_l[name], table, lengths,
-                        write_slot, write_off, cfg, f)
+                        write_slot, write_off, cfg, f, fused)
                 else:
                     h, st_out[name] = _sublayer_decode(
                         lp[name], h, st_l[name], cfg, m, f,
@@ -116,5 +160,5 @@ def build_decode_step(model):
         logits = lm_head(params["embed"], x)               # (S,1,V)
         return logits[:, -1], kv, states
 
-    n_scan = _n_scan(cfg)  # noqa: F841  (validates the scan layout early)
+    _n_scan(cfg)           # called for effect: validates the scan layout early
     return jax.jit(step)

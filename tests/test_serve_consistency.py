@@ -142,8 +142,17 @@ def test_cache_dtype_default_and_parity():
     assert resolve_cache_dtype("auto") == jnp.float32
     assert resolve_cache_dtype("bf16") == jnp.bfloat16
     assert resolve_cache_dtype("fp32") == jnp.float32
-    with pytest.raises(ValueError):
-        resolve_cache_dtype("int8")
+    # quantized paged-pool spellings resolve...
+    assert resolve_cache_dtype("int8") == jnp.int8
+    assert resolve_cache_dtype("fp8") == jnp.float8_e4m3fn
+    assert resolve_cache_dtype("float8_e4m3fn") == jnp.float8_e4m3fn
+    # ...unknown names fail with the valid list spelled out...
+    with pytest.raises(ValueError, match="valid names: auto.*int8"):
+        resolve_cache_dtype("int4")
+    # ...and the dense Engine refuses them (fleet-only storage dtypes)
+    with pytest.raises(ValueError, match="fleet"):
+        Engine(build_model(get_reduced("qwen1.5-0.5b")), params=None,
+               cache_dtype=jnp.int8)
 
     cfg = get_reduced("qwen2-7b")
     model = build_model(cfg)

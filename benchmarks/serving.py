@@ -61,16 +61,20 @@ def run(quick: bool = False) -> List[Dict]:
         t0 = time.perf_counter()
         rep = router.run(wl, slo_ms=50.0)
         wall_s = time.perf_counter() - t0
-        us_per_tok = wall_s * 1e6 / max(1, rep.generated_tokens)
-        comm = rep.kv_bytes_written + rep.refresh_bytes
+        # rows read the report through FleetReport.to_dict() — the same
+        # serialization path as `launch.serve --report` and the obs
+        # metrics export — so a field drift breaks all three at once
+        d = rep.to_dict()
+        us_per_tok = wall_s * 1e6 / max(1, d["generated_tokens"])
+        comm = d["kv_bytes_written"] + d["refresh_bytes"]
         rows.append({
             "name": f"serving/{scenario}_{policy}",
             "us_per_call": us_per_tok,
-            "derived": (f"p99_ttft_ms={rep.p99_ttft_ms:.3f},"
-                        f"slo={rep.slo_attainment:.3f},"
-                        f"sim_tok_s={rep.sim_tokens_per_s:.1f},"
-                        f"completed={rep.completed},"
-                        f"digest={rep.stream_digest[:12]},"
+            "derived": (f"p99_ttft_ms={d['p99_ttft_ms']:.3f},"
+                        f"slo={d['slo_attainment']:.3f},"
+                        f"sim_tok_s={d['sim_tokens_per_s']:.1f},"
+                        f"completed={d['completed']},"
+                        f"digest={d['stream_digest'][:12]},"
                         f"comm_bytes={comm}"),
         })
     rows.extend(_decode_rows(model, quick))

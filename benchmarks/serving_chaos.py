@@ -45,16 +45,19 @@ STRAGGLER = dict(straggler_peers=(1,), straggler_factor=4.0,
 
 
 def _row(name: str, rep, wall_s: float) -> Dict:
-    comm = rep.kv_bytes_written + rep.refresh_bytes
+    # FleetReport.to_dict() is the shared serialization path (CLI --report,
+    # obs metrics export, bench rows): a field drift breaks all consumers
+    d = rep.to_dict()
+    comm = d["kv_bytes_written"] + d["refresh_bytes"]
     return {
         "name": f"chaos/{name}",
-        "us_per_call": wall_s * 1e6 / max(1, rep.generated_tokens),
-        "derived": (f"slo={rep.slo_attainment:.3f},"
-                    f"goodput={rep.goodput_tokens_per_s:.1f},"
-                    f"completed={rep.completed},"
-                    f"migr={rep.migrations},"
-                    f"lost={rep.lost_tokens},dup={rep.duplicated_tokens},"
-                    f"digest={rep.stream_digest[:12]},"
+        "us_per_call": wall_s * 1e6 / max(1, d["generated_tokens"]),
+        "derived": (f"slo={d['slo_attainment']:.3f},"
+                    f"goodput={d['goodput_tokens_per_s']:.1f},"
+                    f"completed={d['completed']},"
+                    f"migr={d['migrations']},"
+                    f"lost={d['lost_tokens']},dup={d['duplicated_tokens']},"
+                    f"digest={d['stream_digest'][:12]},"
                     f"comm_bytes={comm}"),
     }
 

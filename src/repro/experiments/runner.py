@@ -129,12 +129,17 @@ def _codist_config(cell: Cell, steps: int):
         burn_in_steps=int(round(cell.alpha.burn_in_frac * steps)))
 
 
-def run_cell(cell: Cell, steps: Optional[int] = None):
+def run_cell(cell: Cell, steps: Optional[int] = None, *,
+             trace_path: Optional[str] = None,
+             metrics_path: Optional[str] = None):
     """Train one grid cell; returns ``(summary_dict, History)``.
 
     The summary's ``final`` block carries what the aggregator needs: final
     task loss (the paper's quality metric), accuracy, and the Section-3
-    communication accounting.
+    communication accounting. ``trace_path``/``metrics_path`` enable the
+    ``repro.obs`` hooks for this cell and write the Perfetto trace / metrics
+    registry there (sync modes trace on the step clock, async on the
+    runtime's simulated seconds); ``None`` leaves the run uninstrumented.
     """
     from repro.data import make_lm_batch
     from repro.train import (History, stack_batches, train_allreduce,
@@ -144,26 +149,42 @@ def run_cell(cell: Cell, steps: Optional[int] = None):
     model, task = _build_cell_setup(cell)
     tc = _train_config(cell, steps)
 
+    metrics = None
+    if metrics_path:
+        from repro.obs import MetricsRegistry
+        metrics = MetricsRegistry()
+
+    def _tracer(async_clock: bool):
+        if not trace_path:
+            return None
+        from repro.obs import for_sim_seconds, for_steps
+        return for_sim_seconds() if async_clock else for_steps()
+
     if cell.mode == "allreduce":
+        tracer = _tracer(False)
+
         def it():
             s = 0
             while True:
                 yield make_lm_batch(task, cell.batch, cell.seq_len, s, None,
                                     seed=cell.seed)
                 s += 1
-        _, hist = train_allreduce(model, tc, it(), log_every=1)
+        _, hist = train_allreduce(model, tc, it(), log_every=1,
+                                  tracer=tracer, metrics=metrics)
         comm = {"comm_events": hist.last("comm_events"),
                 "comm_bytes": hist.last("comm_bytes")}
     elif cell.mode in ASYNC_MODES:
         from repro.runtime import AsyncScheduler, FaultConfig
         codist = _codist_config(cell, steps)
         faults = FaultConfig(n_peers=cell.peers, seed=cell.seed)
+        tracer = _tracer(True)
 
         def batches(step):
             return make_lm_batch(task, cell.batch, cell.seq_len, step, None,
                                  seed=cell.seed)
         report = AsyncScheduler(model, tc, codist, batches, faults,
-                                log_every=1).run()
+                                log_every=1, tracer=tracer,
+                                metrics=metrics).run()
         records = sorted(
             (r for h in report.histories.values() for r in h.records),
             key=lambda r: (r["step"], r.get("peer", 0)))
@@ -173,13 +194,15 @@ def run_cell(cell: Cell, steps: Optional[int] = None):
     else:
         codist = _codist_config(cell, steps)
         coordinated = codist.mode == "predictions"
+        tracer = _tracer(False)
 
         def batches(step):
             return stack_batches([
                 make_lm_batch(task, cell.batch, cell.seq_len, step,
                               None if coordinated else g, seed=cell.seed)
                 for g in range(cell.peers)])
-        _, hist = train_codist(model, codist, tc, batches, log_every=1)
+        _, hist = train_codist(model, codist, tc, batches, log_every=1,
+                               tracer=tracer, metrics=metrics)
         comm = {"comm_events": hist.last("comm_events"),
                 "comm_bytes": hist.last("comm_bytes")}
 
@@ -213,6 +236,10 @@ def run_cell(cell: Cell, steps: Optional[int] = None):
         "steps": steps,
         "final": final,
     }
+    if tracer is not None:
+        tracer.save(trace_path)
+    if metrics is not None:
+        metrics.save(metrics_path)
     return summary, hist
 
 
@@ -231,13 +258,18 @@ class CellResult:
 
 def run_sweep(spec: SweepSpec, out_root: str = "results/sweeps", *,
               resume: bool = False, max_cells: Optional[int] = None,
-              steps: Optional[int] = None,
+              steps: Optional[int] = None, trace: bool = False,
+              metrics: bool = False,
               log: Callable[[str], None] = print) -> List[CellResult]:
     """Run (a prefix of) a sweep's cells, persisting each as it completes.
 
     A failed cell is recorded and the sweep continues — crash-safety means
     one bad cell never costs the finished ones. The caller decides whether
     failures are fatal (the CLI exits 1 if any cell failed).
+
+    ``trace``/``metrics`` write per-cell observability artifacts next to
+    each result: ``<cell_id>.trace.json`` (Perfetto trace) and
+    ``<cell_id>.metrics.json`` (repro.obs registry dump).
     """
     sweep_dir = sweep_dir_for(spec.name, out_root)
     os.makedirs(sweep_dir, exist_ok=True)
@@ -258,7 +290,14 @@ def run_sweep(spec: SweepSpec, out_root: str = "results/sweeps", *,
             continue
         t0 = time.time()
         try:
-            summary, hist = run_cell(cell, n_steps)
+            summary, hist = run_cell(
+                cell, n_steps,
+                trace_path=(os.path.join(
+                    sweep_dir, f"{cell.cell_id}.trace.json")
+                    if trace else None),
+                metrics_path=(os.path.join(
+                    sweep_dir, f"{cell.cell_id}.metrics.json")
+                    if metrics else None))
         except Exception as e:  # noqa: BLE001 - record and keep sweeping
             dt = time.time() - t0
             log(f"{tag}: FAILED after {dt:.1f}s ({type(e).__name__}: {e})")

@@ -97,6 +97,13 @@ def main() -> None:
                     help="scale queue bounds with available capacity so a "
                          "shrunken fleet sheds at the edge")
     ap.add_argument("--report", default="", help="write the JSON report here")
+    # ---- observability (docs/observability.md) ----
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome/Perfetto trace of the run here "
+                         "(simulated-ms clock; bit-identical per seed)")
+    ap.add_argument("--metrics", default="",
+                    help="write the repro.obs metrics registry (counters/"
+                         "gauges/histograms) as JSON here")
     # ---- legacy single-engine mode ----
     ap.add_argument("--single", action="store_true",
                     help="legacy path: one Engine.generate batch, no fleet")
@@ -114,6 +121,9 @@ def main() -> None:
         if is_quantized_dtype(cache_dtype):
             ap.error(f"--cache-dtype {args.cache_dtype} is a quantized "
                      "paged-pool dtype: fleet mode only (drop --single)")
+        if args.trace or args.metrics:
+            ap.error("--trace/--metrics instrument the fleet's simulated "
+                     "clock: fleet mode only (drop --single)")
         return _single(args, cfg, model, cache_dtype)
     if cfg.is_encdec or cfg.num_patches or not hasattr(model, "decode"):
         import sys
@@ -142,13 +152,19 @@ def main() -> None:
         defense = FleetDefense(
             hedging=args.hedge,
             degraded_admission=(args.degraded_admission == "on"))
+    tracer = metrics = None
+    if args.trace or args.metrics:
+        from repro.obs import MetricsRegistry, for_sim_ms
+        tracer = for_sim_ms() if args.trace else None
+        metrics = MetricsRegistry() if args.metrics else None
     router = FleetRouter(model, peer_params, config=fc, policy=args.router,
                          cache_dtype=cache_dtype,
                          canary_every=args.canary_every,
                          snapshot_dir=args.snapshot_dir or None,
                          refresh_every_ms=args.refresh_every_ms,
                          staleness_bound=args.staleness_bound,
-                         chaos=chaos, defense=defense)
+                         chaos=chaos, defense=defense,
+                         tracer=tracer, metrics=metrics)
     if args.snapshot_dir:
         n = router.refresh_now()
         print(f"initial weight refresh: {n}/{args.peers} peers from "
@@ -188,6 +204,12 @@ def main() -> None:
         with open(args.report, "w") as f:
             f.write(rep.to_json() + "\n")
         print(f"wrote {args.report}")
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"wrote {args.trace} ({tracer.n_events} trace events)")
+    if metrics is not None:
+        metrics.save(args.metrics)
+        print(f"wrote {args.metrics}")
 
 
 def _single(args, cfg, model, cache_dtype) -> None:

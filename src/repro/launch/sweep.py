@@ -3,7 +3,7 @@
     PYTHONPATH=src python -m repro.launch.sweep \\
         --spec experiments/specs/paper_grid_small.yaml \\
         [--out results/sweeps] [--resume] [--max-cells N] [--steps N] \\
-        [--list] [--aggregate-only] [--no-aggregate]
+        [--list] [--aggregate-only] [--no-aggregate] [--trace] [--metrics]
 
 Cells persist individually under ``<out>/<spec.name>/`` as they complete
 (``<cell_id>.jsonl`` history + ``<cell_id>.json`` summary), so a killed
@@ -39,6 +39,12 @@ def main(argv=None) -> int:
                     help="skip running; aggregate existing results")
     ap.add_argument("--no-aggregate", action="store_true",
                     help="run cells but skip the aggregation pass")
+    ap.add_argument("--trace", action="store_true",
+                    help="write a per-cell Perfetto trace next to each "
+                         "result (<cell_id>.trace.json; docs/observability.md)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="write a per-cell repro.obs metrics dump next to "
+                         "each result (<cell_id>.metrics.json)")
     args = ap.parse_args(argv)
 
     from repro.experiments import (aggregate_and_write, load_spec, run_sweep,
@@ -56,7 +62,8 @@ def main(argv=None) -> int:
     if not args.aggregate_only:
         results = run_sweep(spec, args.out, resume=args.resume,
                             max_cells=args.max_cells or None,
-                            steps=args.steps or None)
+                            steps=args.steps or None,
+                            trace=args.trace, metrics=args.metrics)
         failed = sum(1 for r in results if r.status == "failed")
 
     if not args.no_aggregate:

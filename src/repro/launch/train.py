@@ -112,7 +112,26 @@ def main() -> None:
     ap.add_argument("--eval-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--out", default="")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome/Perfetto trace here (codist-async: "
+                         "virtual cluster clock; other modes: step clock). "
+                         "Bit-identical per seed — see docs/observability.md")
+    ap.add_argument("--metrics", default="",
+                    help="write the repro.obs metrics registry as JSON here")
     args = ap.parse_args()
+
+    tracer = metrics = None
+    if args.metrics:
+        from repro.obs import MetricsRegistry
+        metrics = MetricsRegistry()
+
+    def _save_obs():
+        if tracer is not None:
+            tracer.save(args.trace)
+            print(f"wrote {args.trace} ({tracer.n_events} trace events)")
+        if metrics is not None:
+            metrics.save(args.metrics)
+            print(f"wrote {args.metrics}")
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)
@@ -158,6 +177,9 @@ def main() -> None:
         ckpt_dir = None
         if args.checkpoint_every:
             ckpt_dir = os.path.join(args.out or ".", "runtime_ckpt")
+        if args.trace:
+            from repro.obs import for_sim_seconds
+            tracer = for_sim_seconds()
         t0 = time.time()
         report = AsyncScheduler(
             model, tc, codist, async_batches, faults,
@@ -166,7 +188,8 @@ def main() -> None:
             checkpoint_dir=ckpt_dir, checkpoint_every=args.checkpoint_every,
             recover_after=(args.recover_after if args.checkpoint_every
                            else None),
-            join_burn_in=args.join_burn_in, log_every=args.log_every).run()
+            join_burn_in=args.join_burn_in, log_every=args.log_every,
+            tracer=tracer, metrics=metrics).run()
         dt = time.time() - t0
         for pid in sorted(report.histories):
             for rec in report.histories[pid].records:
@@ -193,8 +216,12 @@ def main() -> None:
                             st.params)
             print(f"wrote per-peer JSONL histories + checkpoints to "
                   f"{args.out}")
+        _save_obs()
         return
 
+    if args.trace:
+        from repro.obs import for_steps
+        tracer = for_steps()
     t0 = time.time()
     if args.mode == "allreduce":
         def it():
@@ -206,7 +233,8 @@ def main() -> None:
         state, hist = train_allreduce(model, tc, it(),
                                       eval_batches=eval_batches,
                                       eval_every=args.eval_every,
-                                      log_every=args.log_every)
+                                      log_every=args.log_every,
+                                      tracer=tracer, metrics=metrics)
     else:
         codist = CodistConfig(
             n_models=args.codist_n,
@@ -236,7 +264,8 @@ def main() -> None:
                                    eval_batches=eval_batches,
                                    eval_every=args.eval_every,
                                    log_every=args.log_every,
-                                   strategy=strategy)
+                                   strategy=strategy,
+                                   tracer=tracer, metrics=metrics)
     dt = time.time() - t0
 
     for rec in hist.records:
@@ -255,6 +284,7 @@ def main() -> None:
         from repro.checkpoint import save_pytree
         save_pytree(os.path.join(args.out, "final"), state.params)
         print(f"wrote {args.out}/history.json and final checkpoint")
+    _save_obs()
 
 
 if __name__ == "__main__":

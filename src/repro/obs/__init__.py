@@ -1,0 +1,27 @@
+"""Deterministic observability: simulated-clock tracing + metrics.
+
+    trace.py     span/event tracer keyed to the simulated clocks; exports
+                 Chrome/Perfetto trace-event JSON, bit-identical per seed
+    metrics.py   counters / gauges / fixed-bucket histograms with exact
+                 quantiles — the one percentile implementation in the repo
+
+Instrumented subsystems (all hooks are no-ops when no tracer/registry is
+attached — the hot paths are untouched on the default path):
+
+    runtime/scheduler.py   per-peer step/publish/recover spans, mailbox
+                           staleness + comm counters
+    train/loop.py          per-step spans, exchange markers, comm counters
+    serve/fleet/           per-request span trees (admit→queue→prefill→
+                           decode→…→emit, surviving migration), per-tick
+                           engine spans, KV-pool occupancy and analytic
+                           decode HBM/FLOP counter streams
+
+Surfaced as ``--trace out.json --metrics out-metrics.json`` on
+``repro.launch.train``, ``repro.launch.serve`` and ``repro.launch.sweep``;
+``tools/trace_check.py`` validates exported traces in CI. See
+docs/observability.md.
+"""
+from repro.obs.metrics import (DEFAULT_BUCKETS, METRICS_SCHEMA_VERSION,  # noqa: F401
+                               Counter, Gauge, Histogram, MetricsRegistry)
+from repro.obs.trace import (TRACE_SCHEMA_VERSION, TraceError,  # noqa: F401
+                             Tracer, for_sim_ms, for_sim_seconds, for_steps)

@@ -1,0 +1,186 @@
+"""Deterministic metrics: counters, gauges, and fixed-bucket histograms
+with exact quantiles.
+
+This is the ONE implementation of percentile/quantile math in the repo —
+the fleet's TTFT/e2e p50/p99, the chaos router's slowest-quantile hedging
+threshold, and the runtime's staleness statistics all go through
+:class:`Histogram`, replacing the ad-hoc ``np.percentile``/``np.quantile``
+call sites that had drifted across modules. Quantiles are **exact** (linear
+interpolation over the full retained sample, numerically identical to
+``np.percentile``'s default method — the retained-sample sizes here are
+simulation-scale, thousands not billions); the fixed buckets exist for the
+exported distribution shape, not as an approximation of the quantiles.
+
+Everything is a pure function of the observation stream, so a registry
+export for a seeded run is bit-identical across reruns — metrics files are
+CI-gateable artifacts exactly like traces and SLO reports.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+METRICS_SCHEMA_VERSION = 1
+
+Number = Union[int, float]
+
+# default fixed bucket upper bounds for latency-like values (ms): roughly
+# log-spaced, wide enough for both decode-tick costs and e2e latencies
+DEFAULT_BUCKETS: Tuple[float, ...] = (
+    1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0,
+    1000.0, 2000.0, 5000.0, 10000.0)
+
+
+class Counter:
+    """Monotonically accumulating value (int-exact when fed ints)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value: Number = 0
+
+    def inc(self, amount: Number = 1) -> None:
+        if amount < 0:
+            raise ValueError(f"counter increment {amount} is negative")
+        self.value += amount
+
+    def to_dict(self) -> Number:
+        return self.value
+
+
+class Gauge:
+    """Last-set value."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value: Number = 0
+
+    def set(self, value: Number) -> None:
+        self.value = value
+
+    def to_dict(self) -> Number:
+        return self.value
+
+
+class Histogram:
+    """Fixed-bucket histogram that also retains the exact sample.
+
+    ``percentile(q)`` (q in [0, 100]) and ``quantile(q)`` (q in [0, 1])
+    reproduce ``np.percentile`` / ``np.quantile`` bit-for-bit on the
+    observation stream — the call sites this class replaced used those
+    directly, and the bit-identical CI gates (SLO reports, bench rows)
+    must not move.
+    """
+
+    __slots__ = ("buckets", "bucket_counts", "values", "_sum")
+
+    def __init__(self, buckets: Tuple[float, ...] = DEFAULT_BUCKETS):
+        if list(buckets) != sorted(buckets):
+            raise ValueError(f"bucket bounds must be sorted: {buckets}")
+        self.buckets = tuple(float(b) for b in buckets)
+        self.bucket_counts = [0] * (len(self.buckets) + 1)  # +overflow
+        self.values: List[float] = []
+        self._sum = 0.0
+
+    def observe(self, value: Number) -> None:
+        v = float(value)
+        self.values.append(v)
+        self._sum += v
+        for i, b in enumerate(self.buckets):
+            if v <= b:
+                self.bucket_counts[i] += 1
+                return
+        self.bucket_counts[-1] += 1
+
+    @property
+    def count(self) -> int:
+        return len(self.values)
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    def percentile(self, q: float) -> float:
+        """Exact percentile (q in [0, 100]); 0.0 on an empty histogram —
+        the convention of the fleet report it replaced."""
+        if not self.values:
+            return 0.0
+        return float(np.percentile(np.asarray(self.values), q))
+
+    def quantile(self, q: float) -> float:
+        """Exact quantile (q in [0, 1]) over the float64 sample — the
+        hedging-threshold convention it replaced."""
+        if not self.values:
+            return 0.0
+        return float(np.quantile(np.asarray(self.values, np.float64), q))
+
+    def to_dict(self) -> Dict:
+        d: Dict = {
+            "count": self.count,
+            "sum": self._sum,
+            "min": min(self.values) if self.values else 0.0,
+            "max": max(self.values) if self.values else 0.0,
+            "p50": self.percentile(50),
+            "p90": self.percentile(90),
+            "p99": self.percentile(99),
+            "buckets": {},
+        }
+        for i, b in enumerate(self.buckets):
+            d["buckets"][f"le_{b:g}"] = self.bucket_counts[i]
+        d["buckets"]["le_inf"] = self.bucket_counts[-1]
+        return d
+
+
+class MetricsRegistry:
+    """Named counters/gauges/histograms with a deterministic export.
+
+    Get-or-create accessors: ``registry.counter("fleet/decode_tokens")``
+    returns the same object every call. Names are free-form; the repo's
+    convention is ``<subsystem>/<metric>`` (docs/observability.md lists
+    what each subsystem emits).
+    """
+
+    def __init__(self) -> None:
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        if name not in self._counters:
+            self._counters[name] = Counter()
+        return self._counters[name]
+
+    def gauge(self, name: str) -> Gauge:
+        if name not in self._gauges:
+            self._gauges[name] = Gauge()
+        return self._gauges[name]
+
+    def histogram(self, name: str,
+                  buckets: Optional[Tuple[float, ...]] = None) -> Histogram:
+        if name not in self._histograms:
+            self._histograms[name] = Histogram(buckets or DEFAULT_BUCKETS)
+        return self._histograms[name]
+
+    def to_dict(self) -> Dict:
+        return {
+            "schema_version": METRICS_SCHEMA_VERSION,
+            "counters": {k: c.to_dict()
+                         for k, c in sorted(self._counters.items())},
+            "gauges": {k: g.to_dict()
+                       for k, g in sorted(self._gauges.items())},
+            "histograms": {k: h.to_dict()
+                           for k, h in sorted(self._histograms.items())},
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True, indent=1)
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            f.write(self.to_json())
+            f.write("\n")

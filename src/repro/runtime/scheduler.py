@@ -77,8 +77,14 @@ class AsyncScheduler:
                  recover_after: Optional[float] = None,
                  join_burn_in: int = 0,
                  log_every: int = 1,
-                 max_sim_time: float = float("inf")):
+                 max_sim_time: float = float("inf"),
+                 tracer=None, metrics=None):
         self.model, self.tc, self.codist = model, tc, codist
+        # observability (repro.obs) on the virtual cluster clock (simulated
+        # seconds): per-peer step/publish/recover spans, mailbox staleness
+        # and comm counters. None = the run path is untouched.
+        self.tracer = tracer
+        self.metrics = metrics
         self.batches = batches
         self.faults = faults
         self.schedule = FaultSchedule(faults, tc.total_steps)
@@ -109,6 +115,8 @@ class AsyncScheduler:
             state = TrainState(params, opt_init(params),
                                jnp.zeros((), jnp.int32))
             self.peers[p] = PeerRuntime(p, state)
+            if tracer is not None:
+                tracer.name_process(p, f"peer{p}")
 
         example = batches(0)
         k = max(1, tc.microbatch)
@@ -190,8 +198,20 @@ class AsyncScheduler:
         if (self.checkpoint_dir and self.checkpoint_every
                 and peer.step % self.checkpoint_every == 0):
             peer.snapshot(self.checkpoint_dir)
-        return (self.schedule.duration(peer.pid, step)
-                + self.schedule.pause_after(peer.pid, step))
+        dur = self.schedule.duration(peer.pid, step)
+        pause = self.schedule.pause_after(peer.pid, step)
+        if self.tracer is not None:
+            self.tracer.complete("step", now, now + dur, pid=peer.pid,
+                                 cat="runtime",
+                                 args={"step": step, "variant": variant})
+            if pause > 0:
+                self.tracer.complete("preempted", now + dur,
+                                     now + dur + pause, pid=peer.pid,
+                                     cat="chaos")
+        if self.metrics is not None:
+            self.metrics.histogram("runtime/step_s").observe(dur)
+            self.metrics.counter("runtime/steps").inc()
+        return dur + pause
 
     # ------------------------------------------------------------------
     def run(self) -> RunReport:
@@ -220,11 +240,17 @@ class AsyncScheduler:
                     pending_joins.remove((pid, jt))
                     self.peers[pid] = self._fresh_peer(pid, jt)
                     clock.add_peer(pid, at=jt)
+                    if self.tracer is not None:
+                        self.tracer.name_process(pid, f"peer{pid}")
+                        self.tracer.instant("join", jt, pid=pid, cat="chaos")
             for pid, rt in list(pending_recoveries):
                 if rt <= clock.now + 1e-9:
                     pending_recoveries.remove((pid, rt))
                     self.peers[pid].restore(self.checkpoint_dir, rt)
                     clock.add_peer(pid, at=rt)
+                    if self.tracer is not None:
+                        self.tracer.instant("recover", rt, pid=pid,
+                                            cat="chaos")
             if not clock.ready_at:
                 continue
 
@@ -242,6 +268,8 @@ class AsyncScheduler:
                     peer.die()
                     clock.remove_peer(p)
                     self.mailbox.drop_peer(p)
+                    if self.tracer is not None:
+                        self.tracer.instant("die", t, pid=p, cat="chaos")
                     if (self.recover_after is not None
                             and peer.can_recover(self.checkpoint_dir)):
                         pending_recoveries.append(
@@ -257,6 +285,16 @@ class AsyncScheduler:
                     wire = self._publish(peer.state.params,
                                          self.batches(peer.step))
                     self.mailbox.post(p, peer.step, t, wire)
+                    if self.tracer is not None:
+                        self.tracer.instant("publish", t, pid=p,
+                                            cat="runtime",
+                                            args={"step": peer.step})
+                        self.tracer.counter(
+                            "mailbox", t,
+                            {"bytes_delivered":
+                             float(self.mailbox.bytes_delivered)})
+                    if self.metrics is not None:
+                        self.metrics.counter("runtime/publishes").inc()
             # phase 2: step
             for p in live:
                 peer = self.peers[p]
@@ -268,6 +306,15 @@ class AsyncScheduler:
                 else:
                     clock.advance(p, dur)
 
+        if self.metrics is not None:
+            m = self.metrics
+            m.counter("runtime/comm_events").inc(self.comm_events)
+            m.counter("runtime/comm_bytes").inc(
+                int(self.mailbox.bytes_delivered))
+            # the mailbox staleness gauge the ISSUE asks for: the keep-last
+            # policy's observed freshness, straight from the mailbox stats
+            for k, v in self.mailbox.stats.as_dict().items():
+                m.gauge(f"runtime/mailbox_staleness_{k}").set(v)
         completion = {p: pr.completed_at for p, pr in self.peers.items()
                       if pr.completed_at is not None}
         finals = {}

@@ -49,6 +49,13 @@ from repro.serve.fleet.workload import Request
 
 PyTree = Any
 
+# trace process-row convention (see docs/observability.md): the router is
+# pid 0, peer engines are pid 1+peer_id, and the per-request span trees get
+# their own process row so Perfetto doesn't split a migrated request's tree
+# across the peers it visited
+ROUTER_PID = 0
+REQUEST_PID = 1000
+
 
 @dataclass(frozen=True)
 class FleetConfig:
@@ -88,6 +95,11 @@ class RequestRecord:
     migrations: int = 0
     tokens: List[int] = field(default_factory=list)
     prefill_logits: Optional[np.ndarray] = None   # kept for canary compares
+    # observability bookkeeping (router-managed; see FleetRouter._trace_*):
+    # only client-facing placements are traced, and each physical placement
+    # emits its span tree exactly once
+    traced: bool = False
+    trace_emitted: bool = False
 
     @property
     def _arrival0_ms(self) -> float:
@@ -144,13 +156,19 @@ class FleetEngine:
 
     def __init__(self, model, params: PyTree, config: FleetConfig,
                  cache_dtype=jnp.float32, keep_logits: bool = False,
-                 peer_id: int = 0):
+                 peer_id: int = 0, tracer=None, metrics=None):
         self.model = model
         self.params = params
         self.config = config
         self.cache_dtype = cache_dtype
         self.keep_logits = keep_logits
         self.peer_id = peer_id
+        # observability (None = hooks compile to a single attribute check:
+        # the default decode tick allocates nothing new — pinned by
+        # tests/test_obs.py's digest-equality test)
+        self.tracer = tracer
+        self.metrics = metrics
+        self._pid = peer_id + 1          # trace process row (0 = router)
         # chaos hooks (None/untouched on the clean path)
         self.chaos = None                # Optional[ChaosSchedule]
         self.health = None               # Optional[PeerHealth]
@@ -187,6 +205,15 @@ class FleetEngine:
         if self.pool.quantized:
             per_row += 4             # one fp32 scale per stored row
         self._kv_bytes_per_token = int(n_attn * 2 * per_row)
+        # analytic decode cost per attended context row: qk + av are each a
+        # multiply-accumulate over num_heads * head_dim lanes per attention
+        # sublayer (2 FLOPs per MAC -> factor 4); HBM traffic is the K and V
+        # rows actually read, at the pool's stored precision
+        self._flops_per_ctx_row = int(
+            4 * n_attn * cfg.num_heads * cfg.resolved_head_dim)
+        if self.tracer is not None:
+            self.tracer.name_process(self._pid, f"peer{peer_id}")
+            self.tracer.name_thread(self._pid, 0, "engine")
 
     # ---- intake ------------------------------------------------------------
     def set_params(self, params: PyTree) -> None:
@@ -271,10 +298,13 @@ class FleetEngine:
             n += 1
         return admitted_tokens
 
-    def _decode_tick(self) -> bool:
+    def _decode_tick(self) -> int:
+        """One batched decode step over every live slot. Returns the total
+        attended context rows (post-write lengths summed over live slots —
+        the analytic HBM/FLOP unit); 0 means nothing decoded."""
         live = sorted(s for s, sl in self.slots.items() if sl.remaining > 0)
         if not live:
-            return False
+            return 0
         S = self.config.max_slots
         active = np.zeros((S,), bool)
         active[live] = True
@@ -289,8 +319,10 @@ class FleetEngine:
         self.pool.kv = kv
         self.pool.states = states
         new_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        ctx_rows = 0
         for s in live:
             self.pool.lengths[s] += 1
+            ctx_rows += int(self.pool.lengths[s])
             sl = self.slots[s]
             tok = int(new_tokens[s])
             sl.record.tokens.append(tok)
@@ -298,7 +330,7 @@ class FleetEngine:
             sl.remaining -= 1
             self.decode_tokens += 1
             self.kv_bytes_written += self._kv_bytes_per_token
-        return True
+        return ctx_rows
 
     def _evict(self, finish_ms: float) -> None:
         for s in [s for s, sl in self.slots.items() if sl.remaining <= 0]:
@@ -321,11 +353,13 @@ class FleetEngine:
                 self._fail_fired = True
                 self.die()
                 return False
+        t0 = self.now_ms
         self._intake()
         admitted_tokens = self._admit()
         newly = {s for s, sl in self.slots.items()
                  if sl.record.admitted_ms == self.now_ms}
-        decoded = self._decode_tick()
+        ctx_rows = self._decode_tick()
+        decoded = ctx_rows > 0
         if admitted_tokens == 0 and not decoded:
             # single-token requests can still finish on prefill alone
             self._evict(self.now_ms)
@@ -350,12 +384,45 @@ class FleetEngine:
         if self.config.defrag_every and \
                 self.steps % self.config.defrag_every == 0:
             self.pool.defrag()
+        if self.tracer is not None:
+            self.tracer.complete(
+                "tick", t0, self.now_ms, pid=self._pid, cat="engine",
+                args={"tick": tick, "admitted_tokens": admitted_tokens,
+                      "live_slots": len(self.slots),
+                      "queued": len(self.waiting)})
+            self.tracer.counter(
+                "kv_pool", self.now_ms,
+                {"utilization": round(self.pool.utilization(), 6),
+                 "kv_bytes_written": self.kv_bytes_written}, pid=self._pid)
+            if decoded:
+                self.tracer.counter(
+                    "decode_analytic", self.now_ms,
+                    {"hbm_bytes": ctx_rows * self._kv_bytes_per_token,
+                     "flops": ctx_rows * self._flops_per_ctx_row},
+                    pid=self._pid)
+        if self.metrics is not None:
+            self.metrics.histogram("fleet/tick_cost_ms").observe(cost)
+            if admitted_tokens:
+                self.metrics.counter("fleet/prefill_tokens").inc(
+                    admitted_tokens)
+            if ctx_rows:
+                self.metrics.counter("fleet/decode_ctx_rows").inc(ctx_rows)
+                self.metrics.counter("fleet/analytic_hbm_bytes").inc(
+                    ctx_rows * self._kv_bytes_per_token)
+                self.metrics.counter("fleet/analytic_flops").inc(
+                    ctx_rows * self._flops_per_ctx_row)
         if self.chaos is not None:
             pause = self.chaos.pause_ms(self.peer_id, tick)
             if pause > 0:
                 # preemption: clock jumps past the pause; slots stay frozen
                 # (no decode progress), the router sees offline_until_ms
                 self.offline_until_ms = self.now_ms + pause
+                if self.tracer is not None:
+                    self.tracer.instant("preempt", self.now_ms, pid=self._pid,
+                                        cat="chaos", args={"pause_ms": pause})
+                    self.tracer.complete("preempted", self.now_ms,
+                                         self.offline_until_ms,
+                                         pid=self._pid, cat="chaos")
                 self.now_ms = self.offline_until_ms
                 self.preemptions_hit += 1
         return True
@@ -391,6 +458,9 @@ class FleetEngine:
         router can harvest in-flight work for migration."""
         self.dead = True
         self.died_at_ms = self.now_ms
+        if self.tracer is not None:
+            self.tracer.instant("die", self.now_ms, pid=self._pid,
+                                cat="chaos")
 
     def revive(self, t_ms: float, params: Optional[PyTree] = None,
                version: Optional[int] = None) -> None:
@@ -410,6 +480,9 @@ class FleetEngine:
             self.set_params(params)
             if version is not None:
                 self.weights_version = version
+        if self.tracer is not None:
+            self.tracer.instant("revive", self.now_ms, pid=self._pid,
+                                cat="chaos")
 
     def harvest(self) -> List[RequestRecord]:
         """Strip every unfinished request (live slots, queued, future) for

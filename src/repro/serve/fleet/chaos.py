@@ -166,8 +166,13 @@ class ChaosStats:
     peers_died: int = 0
     peers_recovered: int = 0
 
-    def summary(self) -> Dict:
+    def to_dict(self) -> Dict:
+        """One serialization path, shared with ``FleetReport.to_dict`` —
+        the CLI report, bench rows, and metrics export all read this."""
         return dict(self.__dict__)
+
+    def summary(self) -> Dict:
+        return self.to_dict()
 
 
 @dataclass

@@ -57,7 +57,9 @@ from repro.checkpoint.io import (has_snapshot, load_snapshot_params,
                                  snapshot_meta)
 from repro.core.codistillation import distill_pair
 from repro.core.comm_model import bits_per_exchange_event, param_bits_of
-from repro.serve.fleet.batcher import FleetConfig, FleetEngine, RequestRecord
+from repro.obs.metrics import Histogram
+from repro.serve.fleet.batcher import (REQUEST_PID, ROUTER_PID, FleetConfig,
+                                       FleetEngine, RequestRecord)
 from repro.serve.fleet.chaos import (ChaosConfig, ChaosSchedule, ChaosStats,
                                      FleetDefense, PeerHealth, _HedgePair,
                                      _Orphan)
@@ -136,14 +138,14 @@ class FleetReport:
     peers_died: int = 0
     peers_recovered: int = 0
 
+    def to_dict(self) -> Dict:
+        """THE serialization path: ``launch/serve.py --report``, the bench
+        rows, and the metrics export all read this dict (field names are the
+        dataclass's — one schema everywhere)."""
+        return dict(self.__dict__)
+
     def to_json(self) -> str:
-        return json.dumps(self.__dict__, indent=1, sort_keys=True)
-
-
-def _pct(xs: List[float], q: float) -> float:
-    if not xs:
-        return 0.0
-    return float(np.percentile(np.asarray(xs), q))
+        return json.dumps(self.to_dict(), indent=1, sort_keys=True)
 
 
 class FleetRouter:
@@ -156,15 +158,24 @@ class FleetRouter:
                  refresh_every_ms: float = 0.0,
                  staleness_bound: int = 0,
                  chaos: Optional[ChaosConfig] = None,
-                 defense: Optional[FleetDefense] = None):
+                 defense: Optional[FleetDefense] = None,
+                 tracer=None, metrics=None):
         assert policy in POLICIES, (policy, POLICIES)
         assert len(peer_params) >= 1
         self.policy = policy
         self.config = config or FleetConfig()
+        # observability (repro.obs): None = every hook is a no-op and the
+        # run path is bit-identical to the uninstrumented router
+        self.tracer = tracer
+        self.metrics = metrics
+        if tracer is not None:
+            tracer.name_process(ROUTER_PID, "router")
+            tracer.name_process(REQUEST_PID, "requests")
         self.engines = [FleetEngine(model, p, self.config,
                                     cache_dtype=cache_dtype,
                                     keep_logits=(policy == "ensemble"),
-                                    peer_id=i)
+                                    peer_id=i, tracer=tracer,
+                                    metrics=metrics)
                         for i, p in enumerate(peer_params)]
         self.canary_every = canary_every
         self.snapshot_dir = snapshot_dir
@@ -203,7 +214,12 @@ class FleetRouter:
         self._phys2logical: Dict[int, RequestRecord] = {}
         self._hedge_pairs: List[_HedgePair] = []
         self._hedge_by_id: Dict[int, _HedgePair] = {}
-        self._size_samples: List[int] = []
+        # hedging threshold over request sizes: an obs.Histogram, which
+        # reproduces the np.quantile math of the ad-hoc sample list it
+        # replaced bit-for-bit
+        self._size_hist = (metrics.histogram("router/hedge_size_tokens")
+                           if metrics is not None else Histogram())
+        self._trace_close: Dict[int, float] = {}   # rid -> last child end
 
     # ---- peer selection ----------------------------------------------------
     def _available(self, t_ms: float) -> List[int]:
@@ -244,6 +260,18 @@ class FleetRouter:
     def _route(self, request) -> None:
         n = len(self.engines)
         t = request.arrival_ms
+        if self.tracer is not None:
+            # one async wrapper per client request, opened at arrival and
+            # closed at report time; the id is the request id, so the tree
+            # survives migration across peers. Children land on the
+            # request's own thread row (tid = rid).
+            self.tracer.name_thread(REQUEST_PID, request.rid,
+                                    f"req{request.rid}")
+            self.tracer.async_begin(
+                "request", request.rid, "request", t, pid=REQUEST_PID,
+                tid=request.rid,
+                args={"prompt_len": request.prompt_len,
+                      "max_new": request.max_new})
         if self.policy == "ensemble":
             if self.defense is None:
                 avail = list(range(n))
@@ -258,6 +286,7 @@ class FleetRouter:
                 if primary in avail:
                     break
             prec = self.engines[primary].enqueue(request)
+            prec.traced = True
             self._primaries.append(prec)
             for off in range(1, n):
                 peer = (primary + off) % n
@@ -271,6 +300,7 @@ class FleetRouter:
             self._no_capacity(request, t)
             return
         prec = self.engines[peer].enqueue(request)
+        prec.traced = True
         self._primaries.append(prec)
         self._since_canary += 1
         if (self.canary_every and n > 1
@@ -286,6 +316,7 @@ class FleetRouter:
         """Every peer is dead or offline at arrival."""
         alive = [i for i, e in enumerate(self.engines) if not e.dead]
         rec = RequestRecord(request)
+        rec.traced = True
         if self.defense is not None and alive:
             # park: the orphan machinery places it when a peer returns
             self._primaries.append(rec)
@@ -295,7 +326,9 @@ class FleetRouter:
             # undefended: queue on whichever peer comes back soonest
             peer = min(alive, key=lambda i: (self.engines[i].offline_until_ms,
                                              i))
-            self._primaries.append(self.engines[peer].enqueue(request))
+            prec = self.engines[peer].enqueue(request)
+            prec.traced = True
+            self._primaries.append(prec)
             return
         rec.rejected = True
         self._primaries.append(rec)
@@ -304,11 +337,15 @@ class FleetRouter:
         d = self.defense
         if not (d and d.hedging and len(self.engines) > 1):
             return
-        self._size_samples.append(request.total_tokens)
-        if len(self._size_samples) <= d.hedge_min_samples:
+        h = self._size_hist
+        if h.count < d.hedge_min_samples:
+            h.observe(request.total_tokens)
             return
-        thr = float(np.quantile(np.asarray(self._size_samples[:-1],
-                                           np.float64), d.hedge_quantile))
+        # threshold over previously-seen sizes only — this request is
+        # observed AFTER the quantile, preserving the exact semantics of the
+        # ad-hoc sample list this histogram replaced
+        thr = h.quantile(d.hedge_quantile)
+        h.observe(request.total_tokens)
         if request.total_tokens < thr:
             return
         cands = [i for i in self._healthy(request.arrival_ms) if i != ppeer]
@@ -321,6 +358,10 @@ class FleetRouter:
         self._hedge_by_id[id(prec)] = pair
         self._hedge_by_id[id(hrec)] = pair
         self.chaos_stats.hedges += 1
+        if self.tracer is not None:
+            self.tracer.instant("hedge", request.arrival_ms, pid=REQUEST_PID,
+                                tid=request.rid, cat="request",
+                                args={"to_peer": hpeer})
 
     # ---- weight refresh (keep-last, staleness-bounded) ---------------------
     def refresh_now(self) -> int:
@@ -356,6 +397,62 @@ class FleetRouter:
                           // self.refresh_every_ms) + 1
             self._next_refresh_ms += periods * self.refresh_every_ms
             self.refresh_now()
+
+    # ---- request-tree tracing ----------------------------------------------
+    def _bump_close(self, rid: int, t: float) -> None:
+        cur = self._trace_close.get(rid)
+        if cur is None or t > cur:
+            self._trace_close[rid] = t
+
+    def _trace_placement(self, rec: RequestRecord, end_t: float, *,
+                         cancelled: bool = False,
+                         note: Optional[str] = None) -> None:
+        """Emit the lifecycle spans of ONE physical placement of a traced
+        request — queue → admit → prefill (or re-prefill for a migrated
+        continuation) → decode — onto the request's own trace row. Called
+        exactly once per placement, at the moment it concludes (finish,
+        harvest, or end of run) when every timestamp is known; the tracer's
+        export-time (ts, seq) ordering interleaves the spans correctly."""
+        tr = self.tracer
+        if tr is None or not rec.traced or rec.trace_emitted:
+            return
+        rec.trace_emitted = True
+        rid = rec.request.rid
+        base: Dict = {}
+        if note:
+            base["note"] = note
+        if cancelled:
+            base["cancelled"] = True
+        args = base or None
+        arr = rec.request.arrival_ms
+        if rec.admitted_ms is None:
+            if not rec.rejected:
+                # still queued/pending when the placement was torn down
+                t1 = max(arr, end_t)
+                tr.complete("queue", arr, t1, pid=REQUEST_PID, tid=rid,
+                            cat="request", args=args)
+                self._bump_close(rid, t1)
+            return
+        adm = max(arr, rec.admitted_ms)
+        tr.complete("queue", arr, adm, pid=REQUEST_PID, tid=rid,
+                    cat="request")
+        tr.instant("admit", adm, pid=REQUEST_PID, tid=rid, cat="request")
+        name = "re-prefill" if rec.origin is not None else "prefill"
+        first = (rec.first_token_ms if rec.first_token_ms is not None
+                 else max(adm, end_t))
+        first = max(adm, first)
+        tr.complete(name, adm, first, pid=REQUEST_PID, tid=rid,
+                    cat="request", args=args)
+        last = first
+        if rec.first_token_ms is not None:
+            dend = (rec.finished_ms if rec.finished_ms is not None
+                    else max(first, end_t))
+            dargs = dict(base)
+            dargs["tokens"] = len(rec.tokens)
+            tr.complete("decode", first, dend, pid=REQUEST_PID, tid=rid,
+                        cat="request", args=dargs)
+            last = dend
+        self._bump_close(rid, last)
 
     # ---- migration / hedging / recovery maintenance ------------------------
     def _logical_of(self, rec: RequestRecord) -> RequestRecord:
@@ -397,6 +494,9 @@ class FleetRouter:
     def _absorb_harvested(self, recs: List[RequestRecord],
                           t_ms: float) -> None:
         for rec in recs:
+            # this placement is dead — emit its partial span tree now, while
+            # its timestamps still describe what actually ran on the peer
+            self._trace_placement(rec, t_ms, cancelled=True, note="harvest")
             pair = self._hedge_by_id.get(id(rec))
             if pair is not None:
                 if rec is pair.rec:
@@ -430,6 +530,7 @@ class FleetRouter:
                 del self._phys2logical[id(prec)]
                 self._queue_migration(logical, t_ms)
             elif prec.finished_ms is not None:
+                self._trace_placement(prec, t_ms)
                 self._continuations.remove(prec)
                 del self._phys2logical[id(prec)]
                 self._fold(logical, prec)
@@ -460,6 +561,11 @@ class FleetRouter:
                 prec.rejected = False
                 prec.cancelled = False
                 self.chaos_stats.hedge_wins += 1
+                if self.tracer is not None and prec.traced:
+                    self.tracer.instant("hedge_win", hrec.finished_ms,
+                                        pid=REQUEST_PID, tid=prec.request.rid,
+                                        cat="request",
+                                        args={"peer": pair.hpeer})
                 self._unhedge(pair)
             elif not pair.palive and not pair.halive:
                 # both copies rejected at admission: the shed stands
@@ -524,10 +630,16 @@ class FleetRouter:
                                      max(req0.arrival_ms, t_ms))
             new_rec = self.engines[peer].enqueue(cont)
             new_rec.origin = req0
+            new_rec.traced = logical.traced
             self._phys2logical[id(new_rec)] = logical
             self._continuations.append(new_rec)
             logical.migrations += 1
             self.chaos_stats.migrations += 1
+            if self.tracer is not None and logical.traced:
+                self.tracer.instant(
+                    "migrate", t_ms, pid=REQUEST_PID, tid=req0.rid,
+                    cat="request",
+                    args={"attempt": logical.migrations, "to_peer": peer})
             self._orphans.remove(orph)
 
     def _update_admission(self, t_ms: float) -> None:
@@ -596,11 +708,47 @@ class FleetRouter:
             self.canary_stats.observe(prec, srec)
         return self._report(workload, slo_ms, end_ms)
 
+    def _finalize_trace(self, end_ms: float) -> None:
+        """Flush any placement whose spans were never emitted (clean
+        finishes, strandings on undefended dead peers) and close every
+        request's async wrapper — the export requires balanced trees even
+        for rejected and unfinished requests."""
+        if self.tracer is None:
+            return
+        for r in sorted(self._primaries, key=lambda r: r.request.rid):
+            if not r.traced:
+                continue
+            rid = r.request.rid
+            finished = r.finished_ms is not None
+            if not r.trace_emitted:
+                self._trace_placement(
+                    r, end_ms, cancelled=not finished and not r.rejected)
+            if finished:
+                self.tracer.instant("emit", r.finished_ms, pid=REQUEST_PID,
+                                    tid=rid, cat="request",
+                                    args={"tokens": len(r.tokens)})
+            close = self._trace_close.get(rid, r.request.arrival_ms)
+            if finished:
+                close = max(close, r.finished_ms)
+            status = ("completed" if finished
+                      else "rejected" if r.rejected else "unfinished")
+            self.tracer.async_end(
+                "request", rid, "request", max(close, r.request.arrival_ms),
+                pid=REQUEST_PID, tid=rid,
+                args={"status": status, "migrations": r.migrations})
+
     def _report(self, workload: Workload, slo_ms: float,
                 end_ms: float) -> FleetReport:
         done = [r for r in self._primaries if r.finished_ms is not None]
         ttfts = [r.ttft_ms for r in done]
         e2es = [r.e2e_ms for r in done]
+        m = self.metrics
+        ttft_h = m.histogram("fleet/ttft_ms") if m is not None else Histogram()
+        e2e_h = m.histogram("fleet/e2e_ms") if m is not None else Histogram()
+        for t in ttfts:
+            ttft_h.observe(t)
+        for t in e2es:
+            e2e_h.observe(t)
         gen = sum(len(r.tokens) for r in done)
         good = sum(len(r.tokens) for r in done
                    if r.ttft_ms is not None and r.ttft_ms <= slo_ms)
@@ -609,7 +757,7 @@ class FleetRouter:
             digest.update(bytes(f"{r.request.rid}:", "ascii"))
             digest.update(np.asarray(r.tokens, np.int32).tobytes())
         cs = self.chaos_stats
-        return FleetReport(
+        rep = FleetReport(
             scenario=workload.scenario,
             router=self.policy,
             peers=len(self.engines),
@@ -618,8 +766,10 @@ class FleetRouter:
             # client-facing rejections only: canary/ensemble shadows are
             # bookkeeping duplicates and must not read as shed client traffic
             rejected=sum(1 for r in self._primaries if r.rejected),
-            p50_ttft_ms=_pct(ttfts, 50), p99_ttft_ms=_pct(ttfts, 99),
-            p50_e2e_ms=_pct(e2es, 50), p99_e2e_ms=_pct(e2es, 99),
+            p50_ttft_ms=ttft_h.percentile(50),
+            p99_ttft_ms=ttft_h.percentile(99),
+            p50_e2e_ms=e2e_h.percentile(50),
+            p99_e2e_ms=e2e_h.percentile(99),
             slo_ms=slo_ms,
             slo_attainment=(sum(1 for t in ttfts if t <= slo_ms) / len(ttfts)
                             if ttfts else 0.0),
@@ -647,3 +797,11 @@ class FleetRouter:
             peers_died=cs.peers_died,
             peers_recovered=cs.peers_recovered,
         )
+        self._finalize_trace(end_ms)
+        if m is not None:
+            # every numeric report field doubles as a gauge: the metrics
+            # export and the CLI report are the same numbers by construction
+            for k, v in rep.to_dict().items():
+                if isinstance(v, (int, float)) and not isinstance(v, bool):
+                    m.gauge(f"report/{k}").set(v)
+        return rep

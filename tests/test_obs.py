@@ -1,0 +1,358 @@
+"""Observability-layer tests: tracer invariants (span nesting, monotonic
+clocks, Perfetto-event validity), exact-quantile histograms vs numpy, trace
+bit-determinism under a fixed seed (train + fleet + chaos), the overhead-off
+guarantee (instrumentation disabled leaves behavior byte-identical), the
+migrated-request span-tree acceptance chain, History schema versioning, and
+the shared ``to_dict`` serialization path.
+
+Hypothesis-driven property tests live in ``tests/test_obs_property.py``
+(they skip where the optional dev dependency isn't installed); everything
+here runs unconditionally.
+"""
+import json
+import os
+import subprocess
+import sys
+from dataclasses import replace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import build_model
+from repro.obs import (DEFAULT_BUCKETS, Counter, Gauge, Histogram,
+                       MetricsRegistry, TraceError, Tracer, for_sim_ms,
+                       for_steps)
+from repro.runtime import FaultConfig
+from repro.serve.fleet import (ChaosConfig, FleetConfig, FleetDefense,
+                               FleetRouter, Request)
+from repro.train.loop import HISTORY_SCHEMA_VERSION, History
+
+TOOLS = os.path.join(os.path.dirname(__file__), "..", "tools")
+sys.path.insert(0, TOOLS)
+import trace_check  # noqa: E402
+
+
+# ----------------------------------------------------------------------------
+# tracer unit invariants
+# ----------------------------------------------------------------------------
+
+class TestTracer:
+    def test_sync_spans_nest_and_export(self):
+        tr = Tracer(unit_us=1000.0)
+        tr.begin("outer", 1.0, pid=0, tid=0)
+        tr.begin("inner", 2.0, pid=0, tid=0)
+        tr.end("inner", 3.0, pid=0, tid=0)
+        tr.end("outer", 4.0, pid=0, tid=0)
+        doc = tr.to_dict()
+        phs = [e["ph"] for e in doc["traceEvents"]]
+        assert phs == ["B", "B", "E", "E"]
+        assert doc["traceEvents"][0]["ts"] == 1000
+
+    def test_lifo_name_mismatch_raises(self):
+        tr = Tracer()
+        tr.begin("a", 0.0, pid=0, tid=0)
+        with pytest.raises(TraceError, match="does not match"):
+            tr.end("b", 1.0, pid=0, tid=0)
+
+    def test_clock_must_be_monotonic_per_track(self):
+        tr = Tracer()
+        tr.begin("a", 5.0, pid=0, tid=0)
+        with pytest.raises(TraceError, match="precedes"):
+            tr.end("a", 4.0, pid=0, tid=0)
+
+    def test_negative_time_rejected(self):
+        with pytest.raises(TraceError, match="negative"):
+            Tracer().instant("x", -1.0, pid=0, tid=0)
+
+    def test_dangling_span_fails_export(self):
+        tr = Tracer()
+        tr.begin("leak", 0.0, pid=0, tid=0)
+        assert tr.open_spans()
+        with pytest.raises(TraceError, match="still open"):
+            tr.to_dict()
+
+    def test_complete_and_counter_shapes(self):
+        tr = Tracer(unit_us=1.0)
+        tr.complete("x", 10.0, 14.0, pid=1, tid=2, cat="c", args={"k": 1})
+        tr.counter("pool", 12.0, {"util": 0.5}, pid=1)
+        evs = tr.to_dict()["traceEvents"]
+        x = next(e for e in evs if e["ph"] == "X")
+        assert (x["ts"], x["dur"], x["pid"], x["tid"]) == (10, 4, 1, 2)
+        c = next(e for e in evs if e["ph"] == "C")
+        assert c["args"] == {"util": 0.5}
+
+    def test_async_span_balanced_per_id(self):
+        tr = Tracer()
+        tr.async_begin("request", 7, "req", 0.0, pid=0, tid=7)
+        tr.async_instant("migrate", 7, "req", 1.0, pid=0, tid=7)
+        tr.async_end("request", 7, "req", 2.0, pid=0, tid=7)
+        phs = [e["ph"] for e in tr.to_dict()["traceEvents"]]
+        assert phs == ["b", "n", "e"]
+
+    def test_export_sorted_and_canonical(self):
+        tr = for_steps()
+        tr.complete("late", 5, 6, pid=0, tid=0)
+        tr.complete("early", 1, 2, pid=0, tid=0)
+        evs = tr.to_dict()["traceEvents"]
+        assert [e["name"] for e in evs] == ["early", "late"]
+        # canonical JSON: key-sorted, no whitespace
+        assert "\n" not in tr.to_json() and '", "' not in tr.to_json()
+
+    def test_validator_rejects_corruption(self, tmp_path):
+        tr = for_steps()
+        tr.complete("ok", 0, 1, pid=0, tid=0)
+        doc = json.loads(tr.to_json())
+        doc["traceEvents"][0]["dur"] = -5
+        bad = tmp_path / "bad.json"
+        bad.write_text(json.dumps(doc))
+        good = tmp_path / "good.json"
+        tr.save(str(good))
+        assert trace_check.main([str(good)]) == 0
+        assert trace_check.main([str(bad)]) == 1
+
+
+# ----------------------------------------------------------------------------
+# metrics registry (exact quantiles; hypothesis properties live in
+# tests/test_obs_property.py so this module runs without the optional dep)
+# ----------------------------------------------------------------------------
+
+class TestMetrics:
+    def test_percentile_matches_numpy_exactly(self):
+        vals = [3.0, 1.5, 9.0, 2.2, 7.7, 0.4]
+        h = Histogram()
+        for v in vals:
+            h.observe(v)
+        for q in (0, 12.5, 50, 90, 99, 100):
+            assert h.percentile(q) == float(np.percentile(np.asarray(vals),
+                                                          q))
+        assert h.quantile(0.9) == float(np.quantile(
+            np.asarray(vals, np.float64), 0.9))
+
+    def test_empty_histogram_quantile_is_zero(self):
+        assert Histogram().percentile(99) == 0.0
+        assert Histogram().quantile(0.9) == 0.0
+
+    def test_registry_get_or_create_and_export(self):
+        m = MetricsRegistry()
+        m.counter("a").inc(3)
+        assert m.counter("a").value == 3
+        m.gauge("g").set(1.5)
+        m.histogram("h", buckets=(1, 10)).observe(4)
+        d = m.to_dict()
+        assert d["schema_version"] == 1
+        assert d["counters"]["a"] == 3
+        assert d["gauges"]["g"] == 1.5
+        assert d["histograms"]["h"]["count"] == 1
+
+    def test_counter_rejects_negative(self):
+        with pytest.raises(ValueError):
+            Counter().inc(-1)
+
+    def test_default_buckets_sorted(self):
+        assert list(DEFAULT_BUCKETS) == sorted(DEFAULT_BUCKETS)
+        assert Gauge().value == 0.0
+
+
+# ----------------------------------------------------------------------------
+# end-to-end: fleet tracing (determinism, overhead-off, span-tree chain)
+# ----------------------------------------------------------------------------
+
+def _tiny_cfg():
+    return replace(get_reduced("qwen1.5-0.5b"), num_layers=2, d_model=64,
+                   d_ff=128, vocab_size=64, num_heads=2, num_kv_heads=2,
+                   head_dim=32)
+
+
+def _requests(cfg, lens, max_new=5, gap_ms=4.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(i, i * gap_ms,
+                    tuple(int(x) for x in rng.integers(0, cfg.padded_vocab,
+                                                       size=l)), max_new)
+            for i, l in enumerate(lens)]
+
+
+class _ListWorkload:
+    def __init__(self, requests, scenario="custom", seed=0):
+        self.requests = requests
+        self.scenario = scenario
+        self.seed = seed
+
+
+def _fleet_fc():
+    return FleetConfig(max_slots=2, block_size=4, num_blocks=32,
+                       max_blocks_per_slot=8, max_queue=32)
+
+
+@pytest.fixture(scope="module")
+def fleet_setup():
+    cfg = _tiny_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    wl = _ListWorkload(_requests(cfg, [5, 9, 12, 7] * 4))
+    return model, params, wl
+
+
+_PREEMPT = ((1, 6, 150.0),)
+
+
+def test_tracing_does_not_perturb_the_fleet(fleet_setup):
+    """Overhead-off guarantee, exercised from the other side: running WITH
+    the tracer + metrics produces a byte-identical FleetReport to the
+    uninstrumented run (the PR-7 behavior)."""
+    model, params, wl = fleet_setup
+    plain = FleetRouter(model, [params, params], config=_fleet_fc()).run(wl)
+    mreg = MetricsRegistry()
+    traced = FleetRouter(model, [params, params], config=_fleet_fc(),
+                         tracer=for_sim_ms(), metrics=mreg).run(wl)
+    assert plain.to_json() == traced.to_json()
+    # the registry mirrors the report it didn't perturb
+    assert mreg.to_dict()["gauges"]["report/completed"] == traced.completed
+
+
+def test_chaos_trace_bit_identical_and_valid(fleet_setup, tmp_path):
+    """Two seeded runs of the preemption chaos scenario produce
+    byte-identical Perfetto JSON that the validator accepts."""
+    model, params, wl = fleet_setup
+    chaos = ChaosConfig(FaultConfig(n_peers=2, seed=0,
+                                    preemptions=_PREEMPT))
+    docs = []
+    for _ in range(2):
+        tr = for_sim_ms()
+        FleetRouter(model, [params, params], config=_fleet_fc(),
+                    chaos=chaos, defense=FleetDefense(), tracer=tr).run(wl)
+        docs.append(tr.to_json())
+    assert docs[0] == docs[1]
+    path = tmp_path / "chaos.trace.json"
+    path.write_text(docs[0] + "\n")
+    assert trace_check.main([str(path)]) == 0
+
+
+def test_migrated_request_span_tree(fleet_setup):
+    """The acceptance chain: a migrated request's span tree carries
+    admit -> queue -> prefill -> decode -> migrate -> re-prefill -> emit
+    on the simulated-ms timeline."""
+    model, params, wl = fleet_setup
+    chaos = ChaosConfig(FaultConfig(n_peers=2, seed=0,
+                                    preemptions=_PREEMPT))
+    tr = for_sim_ms()
+    rep = FleetRouter(model, [params, params], config=_fleet_fc(),
+                      chaos=chaos, defense=FleetDefense(), tracer=tr).run(wl)
+    assert rep.migrations >= 1
+    names = {}
+    for e in tr.to_dict()["traceEvents"]:
+        if e.get("cat") == "request":
+            names.setdefault(e["tid"], []).append(e["name"])
+    migrated = [tid for tid, ns in names.items() if "migrate" in ns]
+    assert migrated, "no migrate annotation in any request tree"
+    chain = names[migrated[0]]
+    for stage in ("request", "queue", "admit", "prefill", "decode",
+                  "migrate", "re-prefill", "emit"):
+        assert stage in chain, f"missing {stage} in {chain}"
+    # engine rows exist too (tick spans + kv_pool counters)
+    cats = {e.get("cat") for e in tr.to_dict()["traceEvents"]}
+    assert "engine" in cats and "chaos" in cats
+
+
+def test_train_trace_bit_identical(tmp_path):
+    """Sync-train tracing on the step clock is bit-deterministic."""
+    from repro.configs import CodistConfig, TrainConfig
+    from repro.data import MarkovLM, make_lm_batch
+    from repro.train import stack_batches, train_codist
+    cfg = _tiny_cfg()
+    model = build_model(cfg)
+    task = MarkovLM(vocab=64, seed=0)
+
+    def one_run():
+        tc = TrainConfig(lr=1e-3, total_steps=4, warmup_steps=1, seed=0)
+        codist = CodistConfig(n_models=2)
+        tr = for_steps()
+        mreg = MetricsRegistry()
+
+        def batches(step):
+            return stack_batches([make_lm_batch(task, 2, 8, step, None,
+                                                seed=0) for _ in range(2)])
+        train_codist(model, codist, tc, batches, log_every=1,
+                     tracer=tr, metrics=mreg)
+        return tr.to_json(), mreg.to_json()
+
+    a, b = one_run(), one_run()
+    assert a == b
+    doc = json.loads(a[0])
+    steps = [e for e in doc["traceEvents"]
+             if e["ph"] == "X" and e["name"] == "step"]
+    assert len(steps) == 4
+    assert json.loads(a[1])["counters"]["train/comm_events"] == 4
+
+
+# ----------------------------------------------------------------------------
+# History schema versioning
+# ----------------------------------------------------------------------------
+
+class TestHistorySchema:
+    def test_roundtrip_writes_header(self, tmp_path):
+        h = History()
+        h.log(0, {"loss": 1.0})
+        h.log(1, {"loss": 0.5})
+        p = tmp_path / "h.jsonl"
+        h.save(str(p))
+        first = json.loads(p.read_text().splitlines()[0])
+        assert first == {"schema_version": HISTORY_SCHEMA_VERSION}
+        assert History.load(str(p)).records == h.records
+
+    def test_unknown_version_rejected_actionably(self, tmp_path):
+        p = tmp_path / "future.jsonl"
+        p.write_text(json.dumps({"schema_version": 99}) + "\n"
+                     + json.dumps({"step": 0, "loss": 1.0}) + "\n")
+        with pytest.raises(ValueError, match=r"schema_version 99.*Re-gen"):
+            History.load(str(p))
+
+    def test_legacy_headerless_still_loads(self, tmp_path):
+        p = tmp_path / "legacy.jsonl"
+        p.write_text(json.dumps({"step": 0, "loss": 2.0}) + "\n")
+        hist = History.load(str(p))
+        assert hist.records == [{"step": 0, "loss": 2.0}]
+
+
+# ----------------------------------------------------------------------------
+# shared serialization path
+# ----------------------------------------------------------------------------
+
+class TestToDict:
+    def test_fleet_report_to_dict_matches_json(self):
+        from repro.serve.fleet.router import FleetReport
+        rep = FleetReport(
+            scenario="custom", router="round_robin", peers=2, seed=0,
+            completed=4, rejected=0, p50_ttft_ms=1.0, p99_ttft_ms=2.0,
+            p50_e2e_ms=3.0, p99_e2e_ms=4.0, slo_ms=50.0, slo_attainment=1.0,
+            sim_tokens_per_s=10.0, generated_tokens=20, kv_bytes_written=64,
+            refresh_bytes=0, refreshes=0, refreshes_dropped_stale=0,
+            peak_pool_utilization=0.5)
+        d = rep.to_dict()
+        assert set(d) == set(rep.__dict__)
+        assert json.loads(rep.to_json()) == json.loads(
+            json.dumps(d, sort_keys=True))
+
+    def test_chaos_stats_to_dict_is_summary(self):
+        from repro.serve.fleet.chaos import ChaosStats
+        s = ChaosStats()
+        s.preemptions = 3
+        assert s.to_dict()["preemptions"] == 3
+        assert s.summary() == s.to_dict()
+
+
+# ----------------------------------------------------------------------------
+# the CLI validator as CI runs it
+# ----------------------------------------------------------------------------
+
+def test_trace_check_cli_subprocess(tmp_path):
+    tr = for_sim_ms()
+    tr.complete("tick", 0.0, 1.0, pid=1, tid=0, cat="engine")
+    p = tmp_path / "t.json"
+    tr.save(str(p))
+    out = subprocess.run(
+        [sys.executable, os.path.join(TOOLS, "trace_check.py"), str(p)],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout

@@ -1,0 +1,153 @@
+#!/usr/bin/env python3
+"""Validate Chrome/Perfetto trace-event JSON produced by ``repro.obs``.
+
+    python tools/trace_check.py out.json [more.json ...]
+
+Checks (exit 0 = every file valid, 1 = a violation, 2 = unreadable/usage):
+
+  * top-level schema: a ``traceEvents`` array plus the ``otherData`` clock
+    stamp written by :class:`repro.obs.trace.Tracer`;
+  * every event has a known ``ph`` phase and ``name``/``pid``/``tid``,
+    integer ``ts >= 0`` (metadata events are pinned at ts 0);
+  * the array is sorted by ``ts`` (the tracer's canonical order — a
+    simulated clock never runs backwards);
+  * complete events (``X``) carry integer ``dur >= 0``;
+  * ``B``/``E`` spans balance per ``(pid, tid)`` track with LIFO name
+    matching (spans nest);
+  * nestable async spans (``b``/``e``) balance per ``(cat, id)`` — the
+    per-request trees close even when a request migrates across peers;
+  * async events (``b``/``e``/``n``) carry an ``id``.
+
+Used by the ``trace-smoke`` CI job next to the byte-identity diff: the
+diff proves determinism, this proves the file is a well-formed trace.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+PHASES = {"X", "B", "E", "b", "e", "n", "i", "C", "M"}
+
+
+def check_events(events: List[Dict], errors: List[str]) -> None:
+    last_ts = None
+    open_sync: Dict[tuple, List[tuple]] = {}
+    open_async: Dict[tuple, List[str]] = {}
+    for i, ev in enumerate(events):
+        where = f"event[{i}] {ev.get('name', '?')!r}"
+        ph = ev.get("ph")
+        if ph not in PHASES:
+            errors.append(f"{where}: unknown ph {ph!r}")
+            continue
+        for key in ("name", "pid", "tid"):
+            if key not in ev:
+                errors.append(f"{where}: missing {key!r}")
+        ts = ev.get("ts")
+        if not isinstance(ts, int) or ts < 0:
+            errors.append(f"{where}: ts must be a non-negative integer, "
+                          f"got {ts!r}")
+            continue
+        if ph == "M":
+            if ts != 0:
+                errors.append(f"{where}: metadata events are pinned at ts 0")
+            continue
+        if last_ts is not None and ts < last_ts:
+            errors.append(f"{where}: ts {ts} < previous event ts {last_ts} "
+                          "(traceEvents must be sorted: simulated clocks "
+                          "are monotonic)")
+        last_ts = ts
+        track = (ev.get("pid"), ev.get("tid"))
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, int) or dur < 0:
+                errors.append(f"{where}: X event needs integer dur >= 0, "
+                              f"got {dur!r}")
+        elif ph == "B":
+            open_sync.setdefault(track, []).append((ev.get("name"), ts))
+        elif ph == "E":
+            stack = open_sync.get(track)
+            if not stack:
+                errors.append(f"{where}: E with no open B on track {track}")
+            else:
+                name, ts0 = stack.pop()
+                if name != ev.get("name"):
+                    errors.append(f"{where}: E closes {ev.get('name')!r} "
+                                  f"but innermost open span is {name!r}")
+                if ts < ts0:
+                    errors.append(f"{where}: E at ts {ts} precedes its B "
+                                  f"at ts {ts0}")
+        elif ph in ("b", "e", "n"):
+            if "id" not in ev:
+                errors.append(f"{where}: async event missing id")
+                continue
+            key = (ev.get("cat"), ev.get("id"))
+            if ph == "b":
+                open_async.setdefault(key, []).append(ev.get("name"))
+            elif ph == "e":
+                stack = open_async.get(key)
+                if not stack:
+                    errors.append(f"{where}: async e with no open b for "
+                                  f"(cat, id)={key}")
+                elif stack[-1] != ev.get("name"):
+                    errors.append(f"{where}: async e closes "
+                                  f"{ev.get('name')!r} but innermost open "
+                                  f"async span is {stack[-1]!r}")
+                else:
+                    stack.pop()
+    for track, stack in sorted(open_sync.items(), key=str):
+        for name, ts0 in stack:
+            errors.append(f"span {name!r} on track {track} opened at ts "
+                          f"{ts0} never closed")
+    for key, stack in sorted(open_async.items(), key=str):
+        for name in stack:
+            errors.append(f"async span {name!r} for (cat, id)={key} "
+                          "never closed")
+
+
+def check_file(path: str) -> List[str]:
+    errors: List[str] = []
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return [f"{path}: not a trace-event JSON object with 'traceEvents'"]
+    other = doc.get("otherData")
+    if not isinstance(other, dict) or "clock" not in other \
+            or "schema_version" not in other:
+        errors.append(f"{path}: missing otherData clock/schema_version "
+                      "stamp (not produced by repro.obs?)")
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return [f"{path}: traceEvents is not an array"]
+    check_events(events, errors)
+    return [f"{path}: {e}" for e in errors]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python tools/trace_check.py",
+        description="Validate repro.obs Chrome/Perfetto trace JSON.")
+    ap.add_argument("traces", nargs="+", help="trace JSON files to check")
+    args = ap.parse_args(argv)
+    failed = False
+    for path in args.traces:
+        try:
+            errors = check_file(path)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{path}: unreadable ({type(e).__name__}: {e})",
+                  file=sys.stderr)
+            return 2
+        if errors:
+            failed = True
+            for e in errors:
+                print(e, file=sys.stderr)
+        else:
+            with open(path) as f:
+                n = len(json.load(f)["traceEvents"])
+            print(f"{path}: OK ({n} events)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

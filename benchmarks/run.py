@@ -28,6 +28,7 @@ Mapping to the paper:
 from __future__ import annotations
 
 import argparse
+import difflib
 import json
 import platform
 import sys
@@ -71,6 +72,11 @@ def main() -> None:
         # an unknown --only used to silently run NOTHING and exit 0
         print(f"unknown benchmark(s): {', '.join(sorted(unknown))}",
               file=sys.stderr)
+        for name in sorted(unknown):
+            close = difflib.get_close_matches(name, REGISTRY, n=1)
+            if close:
+                print(f"did you mean: {close[0]} (for {name!r})?",
+                      file=sys.stderr)
         print(f"registered: {', '.join(REGISTRY)}", file=sys.stderr)
         sys.exit(2)
 

@@ -75,6 +75,22 @@ def main() -> None:
                          "staleness-bounded weight refresh")
     ap.add_argument("--refresh-every-ms", type=float, default=0.0)
     ap.add_argument("--staleness-bound", type=int, default=0)
+    # ---- speculative decoding (docs/serving.md) ----
+    ap.add_argument("--speculative", action="store_true",
+                    help="peer-speculative decoding: a codistilled partner "
+                         "drafts k tokens, the target verifies them in one "
+                         "batched forward — bit-identical to plain decode "
+                         "at temperature 0 (sets --router speculative)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="draft tokens proposed per speculative round")
+    ap.add_argument("--draft-peer", default="ring",
+                    help="'ring' pairs every peer with its neighbor (all "
+                         "peers serve); an integer dedicates that peer to "
+                         "drafting (excluded from the serving rotation)")
+    ap.add_argument("--identical-peers", action="store_true",
+                    help="init every peer from the SAME key — the "
+                         "converged-codistillation limit (accept rate 1.0; "
+                         "used by the spec-decode CI smoke)")
     # ---- chaos (docs/chaos.md) ----
     ap.add_argument("--faults", default="none",
                     help="seeded fault spec on the decode-tick clock, same "
@@ -133,8 +149,28 @@ def main() -> None:
               "batched-generate path", file=sys.stderr)
         sys.exit(2)
 
-    peer_params = [model.init(jax.random.key(args.seed + i))
-                   for i in range(args.peers)]
+    if args.speculative:
+        args.router = "speculative"
+    spec = None
+    if args.router == "speculative":
+        from repro.serve.fleet import SpecConfig
+        if args.draft_peer == "ring":
+            draft_peer = None
+        else:
+            try:
+                draft_peer = int(args.draft_peer)
+            except ValueError:
+                ap.error(f"--draft-peer {args.draft_peer!r}: expected "
+                         "'ring' or a peer index")
+            if not 0 <= draft_peer < args.peers:
+                ap.error(f"--draft-peer {draft_peer} out of range for "
+                         f"--peers {args.peers}")
+        spec = SpecConfig(k=args.draft_k, draft_peer=draft_peer)
+    if args.identical_peers:
+        peer_params = [model.init(jax.random.key(args.seed))] * args.peers
+    else:
+        peer_params = [model.init(jax.random.key(args.seed + i))
+                       for i in range(args.peers)]
     fc = FleetConfig(max_slots=args.slots, block_size=args.block_size,
                      num_blocks=args.num_blocks,
                      max_blocks_per_slot=max(
@@ -164,7 +200,7 @@ def main() -> None:
                          refresh_every_ms=args.refresh_every_ms,
                          staleness_bound=args.staleness_bound,
                          chaos=chaos, defense=defense,
-                         tracer=tracer, metrics=metrics)
+                         tracer=tracer, metrics=metrics, spec=spec)
     if args.snapshot_dir:
         n = router.refresh_now()
         print(f"initial weight refresh: {n}/{args.peers} peers from "
@@ -191,6 +227,12 @@ def main() -> None:
         print(f"canary: n={rep.canary['count']} "
               f"mean_mse={rep.canary['mean_mse']:.4f} "
               f"token_agreement={rep.canary['token_agreement']:.3f}")
+    if spec is not None:
+        print(f"speculative: k={spec.k} accept_rate="
+              f"{rep.spec_accept_rate:.3f} rounds={rep.spec_rounds} "
+              f"drafted/accepted = "
+              f"{rep.spec_drafted_tokens}/{rep.spec_accepted_tokens}  "
+              f"fallback_ticks={rep.spec_fallback_ticks}")
     if chaos is not None or defense is not None:
         print(f"chaos: defended={'no' if defense is None else 'yes'} "
               f"goodput tok/s = {rep.goodput_tokens_per_s:.1f}  "

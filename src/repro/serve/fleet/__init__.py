@@ -19,6 +19,11 @@ docs/serving.md for the architecture and the scenario catalog.
     chaos.py      seeded fault injection over the runtime's FaultSchedule
                   (stragglers / preemption / failure+recovery on the
                   fleet's decode-tick clock) — see docs/chaos.md
+    spec.py       peer-speculative decoding: a codistilled partner (or a
+                  student model) drafts k tokens, the target verifies them
+                  in one batched forward — bit-identical to plain decode
+                  at temperature 0; accept rate doubles as a live
+                  codistillation-quality signal
 """
 from repro.serve.fleet.batcher import (FleetConfig, FleetEngine,  # noqa: F401
                                        RequestRecord)
@@ -27,5 +32,7 @@ from repro.serve.fleet.chaos import (ChaosConfig, ChaosSchedule,  # noqa: F401
                                      ChaosStats, FleetDefense, PeerHealth)
 from repro.serve.fleet.router import (FleetReport, FleetRouter,  # noqa: F401
                                       POLICIES)
+from repro.serve.fleet.spec import (SpecConfig, SpecEngine,  # noqa: F401
+                                    SpecStats)
 from repro.serve.fleet.workload import (SCENARIOS, Request,  # noqa: F401
                                         Workload, generate_workload)

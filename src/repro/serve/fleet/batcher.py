@@ -151,6 +151,19 @@ def _shared_exec(model, cache_dtype, fused_attention=None):
     return per_model[key]
 
 
+def _shared_verify(model, cache_dtype, fused_attention, k: int):
+    """Compile-once k-token speculative verify, cached alongside the decode
+    step (same weak-keyed registry: N peers of one fleet share one trace
+    per (dtype, fused, k))."""
+    from repro.serve.fleet.model_exec import build_verify_step
+    per_model = _EXEC_CACHE.setdefault(model, {})
+    key = (jnp.dtype(cache_dtype).name, fused_attention, "verify", k)
+    if key not in per_model:
+        per_model[key] = build_verify_step(model, k,
+                                           fused_attention=fused_attention)
+    return per_model[key]
+
+
 class FleetEngine:
     """One peer's continuous batcher: paged pool + compile-once decode."""
 
@@ -332,6 +345,14 @@ class FleetEngine:
             self.kv_bytes_written += self._kv_bytes_per_token
         return ctx_rows
 
+    def _decode_cost_ms(self) -> float:
+        """Simulated cost of the tick's decode work (hook: the speculative
+        engine charges draft + verify instead of one plain step)."""
+        return self.config.decode_ms_per_step
+
+    def _defrag(self) -> None:
+        self.pool.defrag()
+
     def _evict(self, finish_ms: float) -> None:
         for s in [s for s, sl in self.slots.items() if sl.remaining <= 0]:
             sl = self.slots.pop(s)
@@ -366,7 +387,7 @@ class FleetEngine:
             return False
         cost = (self.config.step_overhead_ms
                 + self.config.prefill_ms_per_token * admitted_tokens
-                + (self.config.decode_ms_per_step if decoded else 0.0))
+                + (self._decode_cost_ms() if decoded else 0.0))
         if self.chaos is not None:
             mult = self.chaos.slowdown(self.peer_id, tick)
             cost *= mult
@@ -383,7 +404,7 @@ class FleetEngine:
                                     self.pool.utilization())
         if self.config.defrag_every and \
                 self.steps % self.config.defrag_every == 0:
-            self.pool.defrag()
+            self._defrag()
         if self.tracer is not None:
             self.tracer.complete(
                 "tick", t0, self.now_ms, pid=self._pid, cat="engine",

@@ -172,6 +172,61 @@ class PagedCachePool:
             woff[blk] = pos % self.block_size
         return wslot, woff
 
+    def write_maps_k(self, active: np.ndarray,
+                     k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Writer maps for a k-token speculative append: row ``j`` maps each
+        active slot's position ``lengths[s] + j`` to its (block, offset).
+        Positions past a slot's reserved capacity are simply absent from the
+        maps (the verify forward's outputs there are truncated by the
+        engine, never emitted). One writer per block per row: within a row
+        every position belongs to a different slot, and blocks are
+        slot-exclusive."""
+        wslots = np.full((k, self.num_blocks), -1, np.int32)
+        woffs = np.zeros((k, self.num_blocks), np.int32)
+        for s in np.nonzero(active)[0]:
+            cap = len(self.slot_blocks[s]) * self.block_size
+            base = int(self.lengths[s])
+            for j in range(k):
+                pos = base + j
+                if pos >= cap:
+                    break
+                blk = self.slot_blocks[s][pos // self.block_size]
+                wslots[j, blk] = s
+                woffs[j, blk] = pos % self.block_size
+        return wslots, woffs
+
+    # ---- speculative rollback (undo log) -----------------------------------
+    def snapshot_rows(self, slot: int, start_pos: int, n_rows: int):
+        """Copy the pool rows (K/V and, when quantized, their scales) for
+        positions ``[start_pos, start_pos + n_rows)`` of ``slot`` — the undo
+        log a speculative verify takes before scattering draft tokens.
+        Restoring a rejected suffix with :meth:`restore_rows` leaves the
+        pool bit-identical to one that never saw the draft (freed blocks
+        keep whatever their previous occupant wrote, so "restore previous
+        contents" is the invariant, not "zero")."""
+        cap = len(self.slot_blocks[slot]) * self.block_size
+        pos = [p for p in range(start_pos, start_pos + n_rows) if p < cap]
+        blocks = np.asarray([self.slot_blocks[slot][p // self.block_size]
+                             for p in pos], np.int32)
+        offs = np.asarray([p % self.block_size for p in pos], np.int32)
+        data = {
+            sub: {name: arr[:, blocks, offs] for name, arr in d.items()}
+            for sub, d in self.kv.items()
+        } if len(pos) else {}
+        return (blocks, offs, data)
+
+    def restore_rows(self, snap, start: int = 0) -> None:
+        """Write back rows ``start..`` of a :meth:`snapshot_rows` snapshot
+        (``start`` counts rows within the snapshot, i.e. draft positions)."""
+        blocks, offs, data = snap
+        if start >= len(blocks):
+            return
+        b, o = blocks[start:], offs[start:]
+        for sub, d in data.items():
+            for name, saved in d.items():
+                self.kv[sub][name] = (
+                    self.kv[sub][name].at[:, b, o].set(saved[:, start:]))
+
     # ---- defrag ------------------------------------------------------------
     def defrag(self) -> int:
         """Compact live blocks to the lowest pool indices (stable in

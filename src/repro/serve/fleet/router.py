@@ -63,11 +63,12 @@ from repro.serve.fleet.batcher import (REQUEST_PID, ROUTER_PID, FleetConfig,
 from repro.serve.fleet.chaos import (ChaosConfig, ChaosSchedule, ChaosStats,
                                      FleetDefense, PeerHealth, _HedgePair,
                                      _Orphan)
+from repro.serve.fleet.spec import SpecConfig, SpecEngine
 from repro.serve.fleet.workload import Workload
 
 PyTree = Any
 
-POLICIES = ("round_robin", "least_loaded", "ensemble")
+POLICIES = ("round_robin", "least_loaded", "ensemble", "speculative")
 
 
 @dataclass
@@ -137,6 +138,14 @@ class FleetReport:
     preemptions: int = 0
     peers_died: int = 0
     peers_recovered: int = 0
+    # speculative decoding (zero on plain runs); the accept rate is the
+    # fleet's live codistillation-quality signal — how often the draft
+    # peer's argmax agrees with the target's, measured on client traffic
+    spec_rounds: int = 0
+    spec_drafted_tokens: int = 0
+    spec_accepted_tokens: int = 0
+    spec_accept_rate: float = 0.0
+    spec_fallback_ticks: int = 0
 
     def to_dict(self) -> Dict:
         """THE serialization path: ``launch/serve.py --report``, the bench
@@ -159,7 +168,9 @@ class FleetRouter:
                  staleness_bound: int = 0,
                  chaos: Optional[ChaosConfig] = None,
                  defense: Optional[FleetDefense] = None,
-                 tracer=None, metrics=None):
+                 tracer=None, metrics=None,
+                 spec: Optional[SpecConfig] = None,
+                 draft_model=None, draft_params: PyTree = None):
         assert policy in POLICIES, (policy, POLICIES)
         assert len(peer_params) >= 1
         self.policy = policy
@@ -171,12 +182,50 @@ class FleetRouter:
         if tracer is not None:
             tracer.name_process(ROUTER_PID, "router")
             tracer.name_process(REQUEST_PID, "requests")
-        self.engines = [FleetEngine(model, p, self.config,
-                                    cache_dtype=cache_dtype,
-                                    keep_logits=(policy == "ensemble"),
-                                    peer_id=i, tracer=tracer,
-                                    metrics=metrics)
-                        for i, p in enumerate(peer_params)]
+        # speculative pairing: every serving peer is a SpecEngine; the
+        # draft is its ring neighbor, a dedicated peer (spec.draft_peer,
+        # excluded from the serving rotation), or a static student model
+        # (draft_model/draft_params). _spec_serving is None on every other
+        # policy — all routing paths stay untouched.
+        self.spec = spec
+        self._spec_serving: Optional[List[int]] = None
+        if policy == "speculative":
+            sc = spec or SpecConfig()
+            self.spec = sc
+            student = draft_params is not None
+            dedicated = None if student else sc.draft_peer
+            if dedicated is not None:
+                assert 0 <= dedicated < len(peer_params), \
+                    (dedicated, len(peer_params))
+            if not student and len(peer_params) < 2:
+                raise ValueError(
+                    "speculative ring pairing needs >= 2 peers "
+                    "(or pass draft_model/draft_params for a student draft)")
+            self.engines = [
+                FleetEngine(model, p, self.config, cache_dtype=cache_dtype,
+                            peer_id=i, tracer=tracer, metrics=metrics)
+                if i == dedicated else
+                SpecEngine(model, p, self.config, sc,
+                           cache_dtype=cache_dtype, peer_id=i,
+                           tracer=tracer, metrics=metrics,
+                           draft_model=draft_model,
+                           draft_params=draft_params)
+                for i, p in enumerate(peer_params)]
+            serving = [i for i, e in enumerate(self.engines)
+                       if isinstance(e, SpecEngine)]
+            if not student:
+                for pos, i in enumerate(serving):
+                    self.engines[i].set_partner(
+                        self.engines[dedicated] if dedicated is not None
+                        else self.engines[serving[(pos + 1) % len(serving)]])
+            self._spec_serving = serving
+        else:
+            self.engines = [FleetEngine(model, p, self.config,
+                                        cache_dtype=cache_dtype,
+                                        keep_logits=(policy == "ensemble"),
+                                        peer_id=i, tracer=tracer,
+                                        metrics=metrics)
+                            for i, p in enumerate(peer_params)]
         self.canary_every = canary_every
         self.snapshot_dir = snapshot_dir
         self.refresh_every_ms = refresh_every_ms
@@ -222,6 +271,13 @@ class FleetRouter:
         self._trace_close: Dict[int, float] = {}   # rid -> last child end
 
     # ---- peer selection ----------------------------------------------------
+    def _serving(self, peers: List[int]) -> List[int]:
+        """Restrict to the serving rotation (drops a dedicated draft peer
+        under the speculative policy; identity everywhere else)."""
+        if self._spec_serving is None:
+            return peers
+        return [i for i in peers if i in self._spec_serving]
+
     def _available(self, t_ms: float) -> List[int]:
         return [i for i, e in enumerate(self.engines)
                 if not e.dead and e.offline_until_ms <= t_ms]
@@ -230,7 +286,7 @@ class FleetRouter:
         """Available peers whose tick-cost EWMA looks nominal; falls back to
         any available peer when every one of them looks sick (serving from a
         straggler beats not serving)."""
-        avail = self._available(t_ms)
+        avail = self._serving(self._available(t_ms))
         if self.defense is None:
             return avail
         ok = [i for i in avail
@@ -243,11 +299,11 @@ class FleetRouter:
         if self.defense is None:
             # undefended: route blindly, dead peers included — this is the
             # baseline the chaos benchmark measures the defenses against
-            cands = list(range(n))
+            cands = self._serving(list(range(n)))
         else:
             cands = self._healthy(t_ms)
-            if not cands:
-                return None
+        if not cands:
+            return None
         if self.policy == "least_loaded":
             return min(cands, key=lambda i: (self.engines[i].load, i))
         for _ in range(n):
@@ -306,15 +362,29 @@ class FleetRouter:
         if (self.canary_every and n > 1
                 and self._since_canary >= self.canary_every):
             self._since_canary = 0
-            prec.canary = True       # keep the primary's prefill logits too
-            shadow = (peer + 1) % n
-            srec = self.engines[shadow].enqueue(request, canary=True)
-            self._pairs.append((prec, srec))
+            shadow = self._shadow_of(peer)
+            if shadow != peer:
+                prec.canary = True   # keep the primary's prefill logits too
+                srec = self.engines[shadow].enqueue(request, canary=True)
+                self._pairs.append((prec, srec))
         self._maybe_hedge(request, prec, peer)
+
+    def _shadow_of(self, peer: int) -> int:
+        """Canary shadow: the next peer in the SERVING rotation (a dedicated
+        draft peer never serves, not even shadows). Returns ``peer`` itself
+        when there is no distinct serving peer to shadow on."""
+        n = len(self.engines)
+        if self._spec_serving is None:
+            return (peer + 1) % n
+        if len(self._spec_serving) < 2 or peer not in self._spec_serving:
+            return peer
+        pos = self._spec_serving.index(peer)
+        return self._spec_serving[(pos + 1) % len(self._spec_serving)]
 
     def _no_capacity(self, request, t_ms: float) -> None:
         """Every peer is dead or offline at arrival."""
-        alive = [i for i, e in enumerate(self.engines) if not e.dead]
+        alive = self._serving([i for i, e in enumerate(self.engines)
+                               if not e.dead])
         rec = RequestRecord(request)
         rec.traced = True
         if self.defense is not None and alive:
@@ -757,6 +827,10 @@ class FleetRouter:
             digest.update(bytes(f"{r.request.rid}:", "ascii"))
             digest.update(np.asarray(r.tokens, np.int32).tobytes())
         cs = self.chaos_stats
+        sstats = [e.spec_stats for e in self.engines
+                  if isinstance(e, SpecEngine)]
+        sp_drafted = sum(s.drafted for s in sstats)
+        sp_accepted = sum(s.accepted for s in sstats)
         rep = FleetReport(
             scenario=workload.scenario,
             router=self.policy,
@@ -796,6 +870,12 @@ class FleetRouter:
             preemptions=sum(e.preemptions_hit for e in self.engines),
             peers_died=cs.peers_died,
             peers_recovered=cs.peers_recovered,
+            spec_rounds=sum(s.rounds for s in sstats),
+            spec_drafted_tokens=sp_drafted,
+            spec_accepted_tokens=sp_accepted,
+            spec_accept_rate=(sp_accepted / sp_drafted if sp_drafted
+                              else 0.0),
+            spec_fallback_ticks=sum(s.fallback_ticks for s in sstats),
         )
         self._finalize_trace(end_ms)
         if m is not None:

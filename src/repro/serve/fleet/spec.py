@@ -1,0 +1,305 @@
+"""Peer-speculative decoding: the fleet drafts for itself.
+
+The paper's central finding — codistilled peers converge to near-identical
+functions despite weak synchronization — is exactly the property
+speculative decoding wants in a draft model. ``SpecEngine`` turns it into
+serving speed: a DRAFT peer (by default another codistilled replica, ring
+paired; optionally a dedicated peer or a smaller student model) proposes
+``k`` tokens autoregressively into a mirrored draft KV pool, and the
+target peer verifies all ``k`` in ONE batched forward over its paged pool
+(``model_exec.build_verify_step`` — each slot expands into k pseudo-slots
+at per-slot vector positions).
+
+Accept/reject is greedy and EXACT at temperature 0: position j's verify
+logits condition only on the prompt plus drafts ``< j`` (the kernel's
+causal mask), so the target's argmax at j is bitwise the token plain
+decode would emit there. The engine accepts the longest matching draft
+prefix, emits the target's own token at the first divergence
+(reject-and-resample), and restores the rejected suffix rows of BOTH
+pools from an undo log (``PagedCachePool.snapshot_rows``/``restore_rows``)
+— after any round the pools are bit-identical to a never-drafted run's.
+No bonus token on a full accept (at most k tokens per round): emitting
+the k+1'th would leave the draft cache a row behind and need catch-up
+machinery; keeping the pools in lockstep is worth one token.
+
+Chaos interplay: a round only runs speculatively when the draft partner
+is available (alive and not preempted) and every live slot's draft cache
+is current. A plain-decode fallback tick marks all live slots
+draft-dirty (their draft caches missed a row), so after a partner outage
+the engine decodes plain until the in-flight slots drain, then resumes
+speculating on fresh admissions — no replay machinery, and the output
+stream is identical either way.
+
+The accept rate is a live codistillation-quality signal (how often the
+peers' argmaxes agree, measured on real traffic) — exported as the
+``fleet/spec_accept`` histogram and per-report ``spec_accept_rate``,
+alongside the offline ``distill_pair`` canary.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.fleet.batcher import (REQUEST_PID, FleetConfig, FleetEngine,
+                                       _shared_exec, _shared_verify)
+from repro.serve.fleet.cache import PagedCachePool
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding knobs.
+
+    Simulated cost model: a speculative round costs
+    ``k * draft_ms_per_token + verify_ms`` instead of
+    ``decode_ms_per_step``, and emits up to k tokens. ``draft_ms_per_token
+    < decode_ms_per_step`` is the speculative bet made honest: the draft
+    steps run on the PARTNER peer (concurrent hardware, overlapped with
+    its own serving), and the verify is one memory-bound forward that
+    streams the KV pool once — same traffic as one plain step.
+    ``verify_ms`` None charges exactly ``decode_ms_per_step``.
+    ``draft_peer`` None ring-pairs every peer with its neighbor (all
+    peers serve); an int dedicates that peer to drafting (excluded from
+    the serving rotation).
+    """
+    k: int = 4
+    draft_ms_per_token: float = 0.25
+    verify_ms: Optional[float] = None
+    draft_peer: Optional[int] = None
+
+
+@dataclass
+class SpecStats:
+    """Deterministic per-engine speculation counters (summed per-report)."""
+    rounds: int = 0
+    drafted: int = 0          # k per live slot per speculative round
+    accepted: int = 0         # matching draft prefix length (raw agreement)
+    fallback_ticks: int = 0   # decode ticks that ran plain (partner down /
+                              # draft caches stale)
+
+    @property
+    def accept_rate(self) -> float:
+        return self.accepted / self.drafted if self.drafted else 0.0
+
+
+class SpecEngine(FleetEngine):
+    """A FleetEngine whose decode tick speculates: k draft steps on the
+    partner's weights against a mirrored draft pool, one batched k-token
+    verify on its own, greedy accept/reject-and-resample. Attention-only
+    models (rollback of recurrent sublayer state is not supported —
+    ``build_verify_step`` raises)."""
+
+    def __init__(self, model, params: PyTree, config: FleetConfig,
+                 spec: SpecConfig, cache_dtype=jnp.float32,
+                 keep_logits: bool = False, peer_id: int = 0, tracer=None,
+                 metrics=None, draft_model=None, draft_params: PyTree = None):
+        super().__init__(model, params, config, cache_dtype=cache_dtype,
+                         keep_logits=keep_logits, peer_id=peer_id,
+                         tracer=tracer, metrics=metrics)
+        self.spec = spec
+        self.spec_stats = SpecStats()
+        self.partner: Optional[FleetEngine] = None   # ring/dedicated pairing
+        self._draft_model = draft_model or model
+        self._draft_params_static = draft_params     # student mode when set
+        # the verify step rejects recurrent architectures at build time —
+        # fail at engine construction, not mid-round
+        self._verify = _shared_verify(model, cache_dtype,
+                                      config.fused_attention, spec.k)
+        self._draft_decode, self._draft_prefill = _shared_exec(
+            self._draft_model, cache_dtype, config.fused_attention)
+        self.draft_pool = PagedCachePool(
+            self._draft_model, max_slots=config.max_slots,
+            block_size=config.block_size, num_blocks=config.num_blocks,
+            max_blocks_per_slot=config.max_blocks_per_slot,
+            cache_dtype=cache_dtype)
+        dcfg = self._draft_model.cfg
+        n_attn = len(self.draft_pool.kv_subs) * self.draft_pool.n_scan
+        per_row = (dcfg.num_kv_heads * dcfg.resolved_head_dim
+                   * jnp.dtype(cache_dtype).itemsize)
+        if self.draft_pool.quantized:
+            per_row += 4
+        self._draft_kv_bytes_per_token = int(n_attn * 2 * per_row)
+        self._verify_ms = (spec.verify_ms if spec.verify_ms is not None
+                           else config.decode_ms_per_step)
+        self._draft_dirty: set = set()
+        self._last_spec = False
+
+    # ---- pairing -----------------------------------------------------------
+    def set_partner(self, engine: FleetEngine) -> None:
+        self.partner = engine
+
+    def _partner_available(self) -> bool:
+        if self._draft_params_static is not None:
+            return True              # static student: always on this host
+        p = self.partner
+        return (p is not None and not p.dead
+                and p.offline_until_ms <= self.now_ms)
+
+    def _draft_params(self) -> PyTree:
+        if self._draft_params_static is not None:
+            return self._draft_params_static
+        return self.partner.params   # read at draft time: refresh-current
+
+    # ---- lifecycle sync: the draft pool mirrors the target pool ------------
+    def _admit(self) -> int:
+        before = set(self.slots)
+        admitted_tokens = super()._admit()
+        for s in sorted(set(self.slots) - before):
+            req = self.slots[s].record.request
+            # mirror the reservation even when the partner is down: block
+            # sequencing in the draft pool stays deterministic either way
+            self.draft_pool.allocate(s, req.prompt_len + req.max_new)
+            if self._partner_available():
+                tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                _, dcache = self._draft_prefill(
+                    self._draft_params(), {"tokens": tokens}, req.prompt_len)
+                self.draft_pool.insert_prefill(s, dcache, req.prompt_len)
+                self.kv_bytes_written += (req.prompt_len
+                                          * self._draft_kv_bytes_per_token)
+            else:
+                self._draft_dirty.add(s)
+        return admitted_tokens
+
+    def _sync_draft_free(self) -> None:
+        for s in range(self.config.max_slots):
+            if s not in self.slots and self.draft_pool.slot_blocks[s]:
+                self.draft_pool.free_slot(s)
+                self._draft_dirty.discard(s)
+
+    def _evict(self, finish_ms: float) -> None:
+        super()._evict(finish_ms)
+        self._sync_draft_free()
+
+    def harvest(self) -> List:
+        out = super().harvest()
+        self._sync_draft_free()
+        return out
+
+    def cancel(self, rec) -> None:
+        super().cancel(rec)
+        self._sync_draft_free()
+
+    def _defrag(self) -> None:
+        super()._defrag()
+        self.draft_pool.defrag()
+
+    # ---- the speculative decode tick ---------------------------------------
+    def _decode_cost_ms(self) -> float:
+        if self._last_spec:
+            return self._verify_ms + self.spec.k * self.spec.draft_ms_per_token
+        return self.config.decode_ms_per_step
+
+    def _decode_tick(self) -> int:
+        live = sorted(s for s, sl in self.slots.items() if sl.remaining > 0)
+        if not live:
+            return 0
+        if (not self._partner_available()
+                or any(s in self._draft_dirty for s in live)):
+            # plain fallback: every live slot's draft cache misses this row
+            self._last_spec = False
+            self._draft_dirty.update(live)
+            self.spec_stats.fallback_ticks += 1
+            if self.metrics is not None:
+                self.metrics.counter("fleet/spec_fallback_ticks").inc()
+            return super()._decode_tick()
+        self._last_spec = True
+        return self._spec_round(live)
+
+    def _spec_round(self, live: List[int]) -> int:
+        k = self.spec.k
+        S = self.config.max_slots
+        active = np.zeros((S,), bool)
+        active[live] = True
+        base_len = self.pool.lengths.copy()
+
+        # --- draft phase: k sequential one-token steps on the partner's
+        # weights against the mirrored draft pool (undo log first)
+        d_snaps = {s: self.draft_pool.snapshot_rows(s, int(base_len[s]), k)
+                   for s in live}
+        d_wslots, d_woffs = self.draft_pool.write_maps_k(active, k)
+        dparams = self._draft_params()
+        dtable = jnp.asarray(self.draft_pool.table)
+        dkv, dstates = self.draft_pool.kv, self.draft_pool.states
+        tok = np.zeros((S, 1), np.int32)
+        for s in live:
+            tok[s, 0] = self.slots[s].next_token
+        drafts = np.zeros((S, k), np.int32)
+        verify_in = np.zeros((S, k), np.int32)
+        for j in range(k):
+            verify_in[:, j] = tok[:, 0]
+            logits, dkv, dstates = self._draft_decode(
+                dparams, dkv, dstates, dtable,
+                jnp.asarray(self.draft_pool.lengths + j),
+                jnp.asarray(d_wslots[j]), jnp.asarray(d_woffs[j]),
+                jnp.asarray(tok))
+            drafts[:, j] = np.asarray(jnp.argmax(logits, axis=-1))
+            tok = drafts[:, j:j + 1].astype(np.int32)
+        self.draft_pool.kv, self.draft_pool.states = dkv, dstates
+
+        # --- verify phase: ONE batched k-token forward on the target pool
+        t_snaps = {s: self.pool.snapshot_rows(s, int(base_len[s]), k)
+                   for s in live}
+        wslots, woffs = self.pool.write_maps_k(active, k)
+        vlogits, kv, states = self._verify(
+            self.params, self.pool.kv, self.pool.states,
+            jnp.asarray(self.pool.table), jnp.asarray(base_len),
+            jnp.asarray(wslots), jnp.asarray(woffs), jnp.asarray(verify_in))
+        self.pool.kv, self.pool.states = kv, states
+        greedy = np.asarray(jnp.argmax(vlogits, axis=-1))   # (S, k)
+
+        # --- accept the matching prefix, resample the divergence, roll back
+        ctx_rows = 0
+        total_m = 0
+        for s in live:
+            sl = self.slots[s]
+            m = 0
+            while m < k and drafts[s, m] == greedy[s, m]:
+                m += 1
+            stream = ([int(t) for t in drafts[s, :m]] if m == k
+                      else [int(t) for t in drafts[s, :m]] + [int(greedy[s, m])])
+            e = min(sl.remaining, len(stream))
+            if e < k:
+                self.pool.restore_rows(t_snaps[s], start=e)
+                self.draft_pool.restore_rows(d_snaps[s], start=e)
+            for t in stream[:e]:
+                sl.record.tokens.append(t)
+            sl.next_token = stream[e - 1]
+            sl.remaining -= e
+            self.pool.lengths[s] += e
+            self.draft_pool.lengths[s] = self.pool.lengths[s]
+            self.decode_tokens += e
+            self.kv_bytes_written += e * (self._kv_bytes_per_token
+                                          + self._draft_kv_bytes_per_token)
+            ctx_rows += sum(int(base_len[s]) + j + 1 for j in range(k))
+            total_m += m
+            self.spec_stats.drafted += k
+            self.spec_stats.accepted += m
+            if self.metrics is not None:
+                self.metrics.histogram("fleet/spec_accept").observe(float(m))
+            if self.tracer is not None and sl.record.traced:
+                self.tracer.instant(
+                    "spec_round", self.now_ms, pid=REQUEST_PID,
+                    tid=sl.record.request.rid, cat="request",
+                    args={"accepted": m, "drafted": k})
+        self.spec_stats.rounds += 1
+        if self.metrics is not None:
+            self.metrics.counter("fleet/spec_rounds").inc()
+            self.metrics.counter("fleet/spec_drafted_tokens").inc(
+                k * len(live))
+            self.metrics.counter("fleet/spec_accepted_tokens").inc(total_m)
+        if self.tracer is not None:
+            d0 = self.now_ms
+            d1 = d0 + k * self.spec.draft_ms_per_token
+            self.tracer.complete(
+                "draft", d0, d1, pid=self._pid, cat="spec",
+                args={"k": k, "slots": len(live),
+                      "draft_peer": (self.partner.peer_id
+                                     if self.partner is not None else -1)})
+            self.tracer.complete(
+                "verify", d1, d1 + self._verify_ms, pid=self._pid, cat="spec",
+                args={"accepted": total_m, "drafted": k * len(live)})
+        return ctx_rows

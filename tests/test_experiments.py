@@ -398,3 +398,67 @@ def test_benchmarks_run_unknown_only_exits_2():
     assert r.returncode == 2, r.stdout + r.stderr
     assert "unknown benchmark" in r.stderr
     assert "registered:" in r.stderr and "sweep_smoke" in r.stderr
+
+
+def test_benchmarks_run_misspelled_only_suggests_nearest():
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "servng"],
+        capture_output=True, text=True, cwd=REPO, env=_env(), timeout=120)
+    assert r.returncode == 2, r.stdout + r.stderr
+    assert "unknown benchmark" in r.stderr
+    assert "did you mean: serving" in r.stderr, r.stderr
+
+
+# ----------------------------------------------------------------------------
+# tools/ci_bitcheck.py — the shared smoke-job determinism gate
+# ----------------------------------------------------------------------------
+
+def _bitcheck(*argv):
+    return subprocess.run(
+        [sys.executable, "tools/ci_bitcheck.py", *argv],
+        capture_output=True, text=True, cwd=REPO, env=_env(), timeout=60)
+
+
+def test_ci_bitcheck_identical_reports_pass(tmp_path):
+    a = tmp_path / "a.json"
+    b = tmp_path / "b.json"
+    a.write_text('{"completed": 16, "nested": {"digest": "abc"}}')
+    b.write_text(a.read_text())
+    r = _bitcheck(str(a), str(b), "--require", "nested.digest",
+                  "--expect", "completed==16", "completed>=1")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
+def test_ci_bitcheck_divergent_reports_fail(tmp_path):
+    a = tmp_path / "a.json"
+    b = tmp_path / "b.json"
+    a.write_text('{"completed": 16}')
+    b.write_text('{"completed": 15}')
+    r = _bitcheck(str(a), str(b))
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "differ" in r.stderr
+
+
+def test_ci_bitcheck_match_mode_compares_only_listed_keys(tmp_path):
+    # --match: two DIFFERENT runs (spec vs plain) that must agree on the
+    # stream digest but nothing else
+    a = tmp_path / "spec.json"
+    b = tmp_path / "plain.json"
+    a.write_text('{"stream_digest": "abc", "spec_rounds": 7}')
+    b.write_text('{"stream_digest": "abc", "spec_rounds": 0}')
+    assert _bitcheck(str(a), str(b), "--match", "stream_digest").returncode == 0
+    assert _bitcheck(str(a), str(b), "--match", "spec_rounds").returncode == 1
+
+
+def test_ci_bitcheck_expect_failures_and_usage_errors(tmp_path):
+    a = tmp_path / "a.json"
+    a.write_text('{"rate": 0.4}')
+    b = tmp_path / "b.json"
+    b.write_text(a.read_text())
+    r = _bitcheck(str(a), str(b), "--expect", "rate>0.5")
+    assert r.returncode == 1 and "expect failed" in r.stderr
+    r = _bitcheck(str(a), str(b), "--expect", "not an expression")
+    assert r.returncode == 2
+    r = _bitcheck(str(a), str(tmp_path / "missing.json"))
+    assert r.returncode == 2

@@ -1,0 +1,156 @@
+#!/usr/bin/env python
+"""Bit-identity + invariant gate for seeded CI smoke runs.
+
+Replaces the copy-pasted "run the CLI twice, diff the JSON reports"
+heredocs in the smoke jobs (serve-smoke / serve-chaos-smoke / trace-smoke /
+spec-decode-smoke) with one tool:
+
+    python tools/ci_bitcheck.py RUN1.json RUN2.json \
+        --require stream_digest completed \
+        --expect "completed==16" "preemptions>=1"
+
+Checks, in order:
+
+  1. RUN1 and RUN2 are BYTE-identical (the determinism gate — every seeded
+     artifact in this repo, report/trace/metrics alike, serializes
+     deterministically, so byte equality is the strongest and simplest
+     check). With ``--match K ...`` the byte check is replaced by equality
+     of just those dotted-path keys across the two files — for comparing
+     DIFFERENT runs that must agree on specific fields (e.g. the
+     speculative run's ``stream_digest`` vs the plain run's).
+  2. ``--require`` keys exist in RUN1 (parsed as JSON; dotted paths
+     descend into nested objects).
+  3. ``--expect`` invariants hold on RUN1: ``key OP value`` with OP one of
+     ``== != >= <= > <`` (numeric when both sides parse as numbers,
+     string equality otherwise).
+
+Exit 0 when every check passes, 1 on any failure, 2 on usage errors.
+Stdlib only (it must run before any dependency install step).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from typing import Any, List
+
+_EXPECT_RE = re.compile(r"^([A-Za-z0-9_.\-]+)\s*(==|!=|>=|<=|>|<)\s*(.+)$")
+_OPS = {
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+    ">=": lambda a, b: a >= b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    "<": lambda a, b: a < b,
+}
+
+
+def _lookup(doc: Any, path: str):
+    cur = doc
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            raise KeyError(path)
+        cur = cur[part]
+    return cur
+
+
+def _coerce(text: str):
+    for cast in (int, float):
+        try:
+            return cast(text)
+        except ValueError:
+            pass
+    return text.strip("\"'")
+
+
+def _load_json(path: str):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"ci_bitcheck: cannot parse {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="byte-identity + invariant gate for seeded CI runs")
+    ap.add_argument("run1", help="first artifact (JSON for key checks)")
+    ap.add_argument("run2", help="second artifact to compare against")
+    ap.add_argument("--require", nargs="*", default=[], metavar="KEY",
+                    help="dotted-path keys that must exist in RUN1")
+    ap.add_argument("--expect", nargs="*", default=[], metavar="EXPR",
+                    help="invariants on RUN1: 'key OP value' "
+                         "(OP: == != >= <= > <)")
+    ap.add_argument("--match", nargs="*", default=None, metavar="KEY",
+                    help="compare only these dotted-path keys between the "
+                         "two files instead of full byte identity")
+    args = ap.parse_args(argv)
+
+    failures: List[str] = []
+    if args.match is None:
+        try:
+            with open(args.run1, "rb") as f1, open(args.run2, "rb") as f2:
+                b1, b2 = f1.read(), f2.read()
+        except OSError as e:
+            print(f"ci_bitcheck: {e}", file=sys.stderr)
+            return 2
+        if b1 != b2:
+            n = next((i for i, (x, y) in enumerate(zip(b1, b2)) if x != y),
+                     min(len(b1), len(b2)))
+            failures.append(
+                f"{args.run1} and {args.run2} differ "
+                f"(first difference at byte {n}; sizes {len(b1)}/{len(b2)})")
+
+    doc1 = _load_json(args.run1)
+    if args.match is not None:
+        doc2 = _load_json(args.run2)
+        for key in args.match:
+            try:
+                v1, v2 = _lookup(doc1, key), _lookup(doc2, key)
+            except KeyError:
+                failures.append(f"--match key {key!r} missing from a report")
+                continue
+            if v1 != v2:
+                failures.append(f"{key}: {v1!r} ({args.run1}) != {v2!r} "
+                                f"({args.run2})")
+
+    for key in args.require:
+        try:
+            _lookup(doc1, key)
+        except KeyError:
+            failures.append(f"required key {key!r} missing from {args.run1}")
+
+    for expr in args.expect:
+        m = _EXPECT_RE.match(expr)
+        if m is None:
+            print(f"ci_bitcheck: cannot parse --expect {expr!r}",
+                  file=sys.stderr)
+            return 2
+        key, op, raw = m.groups()
+        want = _coerce(raw)
+        try:
+            got = _lookup(doc1, key)
+        except KeyError:
+            failures.append(f"--expect key {key!r} missing from {args.run1}")
+            continue
+        if isinstance(want, (int, float)) and isinstance(got, bool):
+            got = int(got)
+        if not _OPS[op](got, want):
+            failures.append(f"expect failed: {key}={got!r}, wanted "
+                            f"{op} {want!r}")
+
+    if failures:
+        for f in failures:
+            print(f"ci_bitcheck FAIL: {f}", file=sys.stderr)
+        return 1
+    checked = (f"match={args.match}" if args.match is not None
+               else "byte-identical")
+    print(f"ci_bitcheck OK: {args.run1} vs {args.run2} ({checked}, "
+          f"{len(args.require)} required, {len(args.expect)} expected)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

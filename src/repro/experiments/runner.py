@@ -131,7 +131,9 @@ def _codist_config(cell: Cell, steps: int):
 
 def run_cell(cell: Cell, steps: Optional[int] = None, *,
              trace_path: Optional[str] = None,
-             metrics_path: Optional[str] = None):
+             metrics_path: Optional[str] = None,
+             alerts_path: Optional[str] = None,
+             rules: Optional[List] = None):
     """Train one grid cell; returns ``(summary_dict, History)``.
 
     The summary's ``final`` block carries what the aggregator needs: final
@@ -140,6 +142,9 @@ def run_cell(cell: Cell, steps: Optional[int] = None, *,
     ``repro.obs`` hooks for this cell and write the Perfetto trace / metrics
     registry there (sync modes trace on the step clock, async on the
     runtime's simulated seconds); ``None`` leaves the run uninstrumented.
+    ``alerts_path`` additionally evaluates a Watchtower (``rules``, or the
+    built-in pack) over the cell's live metrics on the same clock and
+    writes its alert JSONL there.
     """
     from repro.data import make_lm_batch
     from repro.train import (History, stack_batches, train_allreduce,
@@ -150,9 +155,19 @@ def run_cell(cell: Cell, steps: Optional[int] = None, *,
     tc = _train_config(cell, steps)
 
     metrics = None
-    if metrics_path:
+    if metrics_path or alerts_path:
+        # alerting needs a live registry even when no metrics dump was
+        # requested; the internal registry is simply not written out
         from repro.obs import MetricsRegistry
         metrics = MetricsRegistry()
+    watch = None
+    if alerts_path:
+        from repro.obs import Watchtower, default_rules
+        is_async = cell.mode in ASYNC_MODES
+        watch = Watchtower(
+            metrics, rules if rules is not None else default_rules(),
+            unit_us=(1_000_000.0 if is_async else 1000.0),
+            clock=("sim_s" if is_async else "steps"))
 
     def _tracer(async_clock: bool):
         if not trace_path:
@@ -170,7 +185,7 @@ def run_cell(cell: Cell, steps: Optional[int] = None, *,
                                     seed=cell.seed)
                 s += 1
         _, hist = train_allreduce(model, tc, it(), log_every=1,
-                                  tracer=tracer, metrics=metrics)
+                                  tracer=tracer, metrics=metrics, watch=watch)
         comm = {"comm_events": hist.last("comm_events"),
                 "comm_bytes": hist.last("comm_bytes")}
     elif cell.mode in ASYNC_MODES:
@@ -184,7 +199,7 @@ def run_cell(cell: Cell, steps: Optional[int] = None, *,
                                  seed=cell.seed)
         report = AsyncScheduler(model, tc, codist, batches, faults,
                                 log_every=1, tracer=tracer,
-                                metrics=metrics).run()
+                                metrics=metrics, watch=watch).run()
         records = sorted(
             (r for h in report.histories.values() for r in h.records),
             key=lambda r: (r["step"], r.get("peer", 0)))
@@ -202,7 +217,7 @@ def run_cell(cell: Cell, steps: Optional[int] = None, *,
                               None if coordinated else g, seed=cell.seed)
                 for g in range(cell.peers)])
         _, hist = train_codist(model, codist, tc, batches, log_every=1,
-                               tracer=tracer, metrics=metrics)
+                               tracer=tracer, metrics=metrics, watch=watch)
         comm = {"comm_events": hist.last("comm_events"),
                 "comm_bytes": hist.last("comm_bytes")}
 
@@ -238,8 +253,10 @@ def run_cell(cell: Cell, steps: Optional[int] = None, *,
     }
     if tracer is not None:
         tracer.save(trace_path)
-    if metrics is not None:
+    if metrics is not None and metrics_path:
         metrics.save(metrics_path)
+    if watch is not None:
+        watch.save(alerts_path)
     return summary, hist
 
 
@@ -256,10 +273,41 @@ class CellResult:
     error: str = ""
 
 
+def _observe_loss_gap(watch, by_key: Dict[tuple, Dict[str, float]],
+                      cell: Cell, summary: Dict, idx: int) -> None:
+    """Feed one finished cell into the sweep-level loss-gap Watchtower.
+
+    ``by_key`` maps ``baseline_key`` (batch, lr) -> {mode: final task_loss}.
+    Whenever a codist cell and its allreduce baseline are both known, the
+    ``sweep/loss_gap`` gauge is set to codist - baseline and the watch is
+    evaluated at the cell index (one cell renders as 1 ms on the sweep
+    clock), so the EWMA-drift rule sees gaps in deterministic cell order.
+    """
+    final = summary.get("final") or {}
+    task_loss = final.get("task_loss")
+    if task_loss is None:
+        return
+    key = tuple(summary.get("baseline_key", cell.baseline_key))
+    slot = by_key.setdefault(key, {})
+    slot[cell.mode] = float(task_loss)
+    base = slot.get("allreduce")
+    if base is None:
+        return
+    if cell.mode == "allreduce":
+        # baseline arrived after its codist partners: flush them in order
+        pairs = [(m, v) for m, v in sorted(slot.items()) if m != "allreduce"]
+    else:
+        pairs = [(cell.mode, slot[cell.mode])]
+    for _, loss in pairs:
+        watch.registry.gauge("sweep/loss_gap").set(round(loss - base, 6))
+        watch.evaluate(idx)
+
+
 def run_sweep(spec: SweepSpec, out_root: str = "results/sweeps", *,
               resume: bool = False, max_cells: Optional[int] = None,
               steps: Optional[int] = None, trace: bool = False,
-              metrics: bool = False,
+              metrics: bool = False, alerts: bool = False,
+              rules_path: Optional[str] = None,
               log: Callable[[str], None] = print) -> List[CellResult]:
     """Run (a prefix of) a sweep's cells, persisting each as it completes.
 
@@ -269,11 +317,26 @@ def run_sweep(spec: SweepSpec, out_root: str = "results/sweeps", *,
 
     ``trace``/``metrics`` write per-cell observability artifacts next to
     each result: ``<cell_id>.trace.json`` (Perfetto trace) and
-    ``<cell_id>.metrics.json`` (repro.obs registry dump).
+    ``<cell_id>.metrics.json`` (repro.obs registry dump). ``alerts`` adds
+    ``<cell_id>.alerts.jsonl`` per cell plus a sweep-level ``alerts.jsonl``
+    that watches the codist-vs-baseline loss gap across cells
+    (``rules_path`` overrides the built-in rule pack for both).
     """
     sweep_dir = sweep_dir_for(spec.name, out_root)
     os.makedirs(sweep_dir, exist_ok=True)
     _write_atomic(os.path.join(sweep_dir, "spec.json"), spec_to_dict(spec))
+
+    cell_rules = None
+    swatch = None
+    by_key: Dict[tuple, Dict[str, float]] = {}
+    if alerts:
+        from repro.obs import (MetricsRegistry, Watchtower, default_rules,
+                               load_rules)
+        cell_rules = load_rules(rules_path) if rules_path else None
+        swatch = Watchtower(
+            MetricsRegistry(),
+            cell_rules if cell_rules is not None else default_rules(),
+            unit_us=1000.0, clock="cells")
 
     cells = spec.cells()
     if max_cells:
@@ -285,8 +348,10 @@ def run_sweep(spec: SweepSpec, out_root: str = "results/sweeps", *,
         tag = f"[{i + 1}/{len(cells)}] {cell.cell_id}"
         if resume and summary_is_valid(sweep_dir, cell, n_steps):
             log(f"{tag}: skipped (already complete)")
-            results.append(CellResult(cell, "skipped", 0.0,
-                                      load_summary(sweep_dir, cell)))
+            summary = load_summary(sweep_dir, cell)
+            if swatch is not None and summary:
+                _observe_loss_gap(swatch, by_key, cell, summary, i)
+            results.append(CellResult(cell, "skipped", 0.0, summary))
             continue
         t0 = time.time()
         try:
@@ -297,7 +362,11 @@ def run_sweep(spec: SweepSpec, out_root: str = "results/sweeps", *,
                     if trace else None),
                 metrics_path=(os.path.join(
                     sweep_dir, f"{cell.cell_id}.metrics.json")
-                    if metrics else None))
+                    if metrics else None),
+                alerts_path=(os.path.join(
+                    sweep_dir, f"{cell.cell_id}.alerts.jsonl")
+                    if alerts else None),
+                rules=cell_rules)
         except Exception as e:  # noqa: BLE001 - record and keep sweeping
             dt = time.time() - t0
             log(f"{tag}: FAILED after {dt:.1f}s ({type(e).__name__}: {e})")
@@ -307,10 +376,17 @@ def run_sweep(spec: SweepSpec, out_root: str = "results/sweeps", *,
         summary_path, hist_path = cell_paths(sweep_dir, cell)
         hist.save(hist_path)          # history first...
         _write_atomic(summary_path, summary)  # ...summary marks completion
+        if swatch is not None:
+            _observe_loss_gap(swatch, by_key, cell, summary, i)
         dt = time.time() - t0
         log(f"{tag}: final task_loss={summary['final']['task_loss']:.4f} "
             f"in {dt:.1f}s")
         results.append(CellResult(cell, "ran", dt, summary))
+    if swatch is not None:
+        swatch.save(os.path.join(sweep_dir, "alerts.jsonl"))
+        s = swatch.summary()
+        log(f"sweep alerts: {s['n_events']} events, still firing: "
+            f"{', '.join(s['firing']) or 'none'}")
     counts = {s: sum(1 for r in results if r.status == s)
               for s in ("ran", "skipped", "failed")}
     log(f"sweep {spec.name}: total={len(results)} ran={counts['ran']} "

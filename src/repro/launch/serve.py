@@ -120,6 +120,18 @@ def main() -> None:
     ap.add_argument("--metrics", default="",
                     help="write the repro.obs metrics registry (counters/"
                          "gauges/histograms) as JSON here")
+    ap.add_argument("--alerts", default="",
+                    help="evaluate Watchtower alert rules over the live "
+                         "metrics on the decode-tick clock and write the "
+                         "alert JSONL here (bit-identical per seed)")
+    ap.add_argument("--rules", default="",
+                    help="JSON alert-rules file for --alerts (default: the "
+                         "built-in rule pack, SLO taken from --slo-ms)")
+    ap.add_argument("--flight-recorder", default="",
+                    help="keep a bounded ring of recent trace events and "
+                         "dump postmortem bundles into this directory on "
+                         "every fired alert or injected fault "
+                         "(requires --alerts)")
     # ---- legacy single-engine mode ----
     ap.add_argument("--single", action="store_true",
                     help="legacy path: one Engine.generate batch, no fleet")
@@ -137,9 +149,10 @@ def main() -> None:
         if is_quantized_dtype(cache_dtype):
             ap.error(f"--cache-dtype {args.cache_dtype} is a quantized "
                      "paged-pool dtype: fleet mode only (drop --single)")
-        if args.trace or args.metrics:
-            ap.error("--trace/--metrics instrument the fleet's simulated "
-                     "clock: fleet mode only (drop --single)")
+        if args.trace or args.metrics or args.alerts or args.flight_recorder:
+            ap.error("--trace/--metrics/--alerts/--flight-recorder "
+                     "instrument the fleet's simulated clock: fleet mode "
+                     "only (drop --single)")
         return _single(args, cfg, model, cache_dtype)
     if cfg.is_encdec or cfg.num_patches or not hasattr(model, "decode"):
         import sys
@@ -188,11 +201,33 @@ def main() -> None:
         defense = FleetDefense(
             hedging=args.hedge,
             degraded_admission=(args.degraded_admission == "on"))
-    tracer = metrics = None
-    if args.trace or args.metrics:
+    if args.rules and not args.alerts:
+        ap.error("--rules requires --alerts")
+    if args.flight_recorder and not args.alerts:
+        ap.error("--flight-recorder requires --alerts (bundles dump on "
+                 "fired alerts and injected faults)")
+    tracer = metrics = watch = recorder = None
+    if args.trace or args.metrics or args.alerts:
         from repro.obs import MetricsRegistry, for_sim_ms
-        tracer = for_sim_ms() if args.trace else None
-        metrics = MetricsRegistry() if args.metrics else None
+        # the flight recorder rides the tracer's event stream, so it
+        # implies an internal tracer even without --trace; likewise
+        # alerting implies an internal registry even without --metrics —
+        # neither internal artifact is written to disk
+        tracer = (for_sim_ms() if (args.trace or args.flight_recorder)
+                  else None)
+        metrics = (MetricsRegistry() if (args.metrics or args.alerts)
+                   else None)
+    if args.alerts:
+        from repro.obs import (FlightRecorder, Watchtower, default_rules,
+                               load_rules)
+        rules = (load_rules(args.rules) if args.rules
+                 else default_rules(slo_ms=args.slo_ms))
+        watch = Watchtower(metrics, rules, unit_us=1000.0, clock="sim_ms")
+        if args.flight_recorder:
+            recorder = FlightRecorder(args.flight_recorder, metrics=metrics)
+            tracer.recorder = recorder
+            watch.on_alert(recorder.on_alert)
+            watch.on_fault(recorder.on_fault)
     router = FleetRouter(model, peer_params, config=fc, policy=args.router,
                          cache_dtype=cache_dtype,
                          canary_every=args.canary_every,
@@ -200,7 +235,19 @@ def main() -> None:
                          refresh_every_ms=args.refresh_every_ms,
                          staleness_bound=args.staleness_bound,
                          chaos=chaos, defense=defense,
-                         tracer=tracer, metrics=metrics, spec=spec)
+                         tracer=tracer, metrics=metrics, watch=watch,
+                         spec=spec)
+    if recorder is not None:
+        # postmortems carry the offending ids: live request/queue state per
+        # peer at dump time (all simulated-clock state — deterministic)
+        recorder.context_fn = lambda: {
+            "peers": [
+                {"peer": i, "dead": e.dead,
+                 "now_ms": round(e.now_ms, 6),
+                 "live_rids": sorted(sl.record.request.rid
+                                     for sl in e.slots.values()),
+                 "queued": len(e.waiting)}
+                for i, e in enumerate(router.engines)]}
     if args.snapshot_dir:
         n = router.refresh_now()
         print(f"initial weight refresh: {n}/{args.peers} peers from "
@@ -246,12 +293,20 @@ def main() -> None:
         with open(args.report, "w") as f:
             f.write(rep.to_json() + "\n")
         print(f"wrote {args.report}")
-    if tracer is not None:
+    if tracer is not None and args.trace:
         tracer.save(args.trace)
         print(f"wrote {args.trace} ({tracer.n_events} trace events)")
-    if metrics is not None:
+    if metrics is not None and args.metrics:
         metrics.save(args.metrics)
         print(f"wrote {args.metrics}")
+    if watch is not None:
+        watch.save(args.alerts)
+        s = watch.summary()
+        print(f"wrote {args.alerts} ({s['n_events']} alert events; "
+              f"still firing: {', '.join(s['firing']) or 'none'})")
+    if recorder is not None:
+        print(f"flight recorder: {len(recorder.dumped)} postmortem "
+              f"bundle(s) in {args.flight_recorder}")
 
 
 def _single(args, cfg, model, cache_dtype) -> None:

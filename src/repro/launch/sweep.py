@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m repro.launch.sweep \\
         --spec experiments/specs/paper_grid_small.yaml \\
         [--out results/sweeps] [--resume] [--max-cells N] [--steps N] \\
-        [--list] [--aggregate-only] [--no-aggregate] [--trace] [--metrics]
+        [--list] [--aggregate-only] [--no-aggregate] [--trace] [--metrics] \\
+        [--alerts] [--rules RULES.json]
 
 Cells persist individually under ``<out>/<spec.name>/`` as they complete
 (``<cell_id>.jsonl`` history + ``<cell_id>.json`` summary), so a killed
@@ -45,7 +46,17 @@ def main(argv=None) -> int:
     ap.add_argument("--metrics", action="store_true",
                     help="write a per-cell repro.obs metrics dump next to "
                          "each result (<cell_id>.metrics.json)")
+    ap.add_argument("--alerts", action="store_true",
+                    help="evaluate Watchtower rules per cell "
+                         "(<cell_id>.alerts.jsonl) plus a sweep-level "
+                         "codist-vs-baseline loss-gap watch (alerts.jsonl); "
+                         "deterministic per seed (docs/observability.md)")
+    ap.add_argument("--rules", default="",
+                    help="JSON rules file overriding the built-in rule pack "
+                         "(requires --alerts)")
     args = ap.parse_args(argv)
+    if args.rules and not args.alerts:
+        ap.error("--rules requires --alerts")
 
     from repro.experiments import (aggregate_and_write, load_spec, run_sweep,
                                    sweep_dir_for)
@@ -63,7 +74,9 @@ def main(argv=None) -> int:
         results = run_sweep(spec, args.out, resume=args.resume,
                             max_cells=args.max_cells or None,
                             steps=args.steps or None,
-                            trace=args.trace, metrics=args.metrics)
+                            trace=args.trace, metrics=args.metrics,
+                            alerts=args.alerts,
+                            rules_path=args.rules or None)
         failed = sum(1 for r in results if r.status == "failed")
 
     if not args.no_aggregate:

@@ -118,20 +118,55 @@ def main() -> None:
                          "Bit-identical per seed — see docs/observability.md")
     ap.add_argument("--metrics", default="",
                     help="write the repro.obs metrics registry as JSON here")
+    ap.add_argument("--alerts", default="",
+                    help="evaluate Watchtower alert rules over the live "
+                         "metrics (codist-async: virtual cluster clock; "
+                         "other modes: step clock) and write the alert "
+                         "JSONL here")
+    ap.add_argument("--rules", default="",
+                    help="JSON alert-rules file for --alerts (default: the "
+                         "built-in rule pack)")
+    ap.add_argument("--flight-recorder", default="",
+                    help="dump postmortem bundles into this directory on "
+                         "every fired alert or injected fault "
+                         "(requires --alerts)")
     args = ap.parse_args()
 
-    tracer = metrics = None
-    if args.metrics:
+    if args.rules and not args.alerts:
+        ap.error("--rules requires --alerts")
+    if args.flight_recorder and not args.alerts:
+        ap.error("--flight-recorder requires --alerts")
+    tracer = metrics = watch = recorder = None
+    if args.metrics or args.alerts:
         from repro.obs import MetricsRegistry
         metrics = MetricsRegistry()
+    if args.alerts:
+        from repro.obs import Watchtower, default_rules, load_rules
+        rules = (load_rules(args.rules) if args.rules else default_rules())
+        # the Watchtower rides the same clock as the tracer would: virtual
+        # cluster seconds for codist-async, the step clock otherwise
+        if args.mode == "codist-async":
+            watch = Watchtower(metrics, rules, unit_us=1_000_000.0,
+                               clock="sim_s")
+        else:
+            watch = Watchtower(metrics, rules, unit_us=1000.0,
+                               clock="steps")
 
     def _save_obs():
-        if tracer is not None:
+        if tracer is not None and args.trace:
             tracer.save(args.trace)
             print(f"wrote {args.trace} ({tracer.n_events} trace events)")
-        if metrics is not None:
+        if metrics is not None and args.metrics:
             metrics.save(args.metrics)
             print(f"wrote {args.metrics}")
+        if watch is not None:
+            watch.save(args.alerts)
+            s = watch.summary()
+            print(f"wrote {args.alerts} ({s['n_events']} alert events; "
+                  f"still firing: {', '.join(s['firing']) or 'none'})")
+        if recorder is not None:
+            print(f"flight recorder: {len(recorder.dumped)} postmortem "
+                  f"bundle(s) in {args.flight_recorder}")
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     model = build_model(cfg)
@@ -177,9 +212,15 @@ def main() -> None:
         ckpt_dir = None
         if args.checkpoint_every:
             ckpt_dir = os.path.join(args.out or ".", "runtime_ckpt")
-        if args.trace:
+        if args.trace or args.flight_recorder:
             from repro.obs import for_sim_seconds
             tracer = for_sim_seconds()
+        if args.flight_recorder:
+            from repro.obs import FlightRecorder
+            recorder = FlightRecorder(args.flight_recorder, metrics=metrics)
+            tracer.recorder = recorder
+            watch.on_alert(recorder.on_alert)
+            watch.on_fault(recorder.on_fault)
         t0 = time.time()
         report = AsyncScheduler(
             model, tc, codist, async_batches, faults,
@@ -189,7 +230,7 @@ def main() -> None:
             recover_after=(args.recover_after if args.checkpoint_every
                            else None),
             join_burn_in=args.join_burn_in, log_every=args.log_every,
-            tracer=tracer, metrics=metrics).run()
+            tracer=tracer, metrics=metrics, watch=watch).run()
         dt = time.time() - t0
         for pid in sorted(report.histories):
             for rec in report.histories[pid].records:
@@ -219,9 +260,15 @@ def main() -> None:
         _save_obs()
         return
 
-    if args.trace:
+    if args.trace or args.flight_recorder:
         from repro.obs import for_steps
         tracer = for_steps()
+    if args.flight_recorder:
+        from repro.obs import FlightRecorder
+        recorder = FlightRecorder(args.flight_recorder, metrics=metrics)
+        tracer.recorder = recorder
+        watch.on_alert(recorder.on_alert)
+        watch.on_fault(recorder.on_fault)
     t0 = time.time()
     if args.mode == "allreduce":
         def it():
@@ -234,7 +281,8 @@ def main() -> None:
                                       eval_batches=eval_batches,
                                       eval_every=args.eval_every,
                                       log_every=args.log_every,
-                                      tracer=tracer, metrics=metrics)
+                                      tracer=tracer, metrics=metrics,
+                                      watch=watch)
     else:
         codist = CodistConfig(
             n_models=args.codist_n,
@@ -265,7 +313,8 @@ def main() -> None:
                                    eval_every=args.eval_every,
                                    log_every=args.log_every,
                                    strategy=strategy,
-                                   tracer=tracer, metrics=metrics)
+                                   tracer=tracer, metrics=metrics,
+                                   watch=watch)
     dt = time.time() - t0
 
     for rec in hist.records:

@@ -1,9 +1,16 @@
-"""Deterministic observability: simulated-clock tracing + metrics.
+"""Deterministic observability: simulated-clock tracing + metrics +
+alerting.
 
     trace.py     span/event tracer keyed to the simulated clocks; exports
                  Chrome/Perfetto trace-event JSON, bit-identical per seed
     metrics.py   counters / gauges / fixed-bucket histograms with exact
                  quantiles — the one percentile implementation in the repo
+    watch.py     Watchtower: declarative alert rules (threshold /
+                 burn-rate / EWMA-drift) evaluated over the registry on
+                 the simulated clock; bit-identical alert JSONL per seed
+    recorder.py  FlightRecorder: bounded ring of recent trace events,
+                 dumps postmortem bundles on alert or injected fault
+    fsio.py      atomic artifact writes (tmp + fsync + os.replace)
 
 Instrumented subsystems (all hooks are no-ops when no tracer/registry is
 attached — the hot paths are untouched on the default path):
@@ -21,7 +28,14 @@ Surfaced as ``--trace out.json --metrics out-metrics.json`` on
 ``tools/trace_check.py`` validates exported traces in CI. See
 docs/observability.md.
 """
-from repro.obs.metrics import (DEFAULT_BUCKETS, METRICS_SCHEMA_VERSION,  # noqa: F401
-                               Counter, Gauge, Histogram, MetricsRegistry)
+from repro.obs.fsio import atomic_write_text  # noqa: F401
+from repro.obs.metrics import (DEFAULT_BUCKETS, GAUGE_WINDOW,  # noqa: F401
+                               METRICS_SCHEMA_VERSION, Counter, Gauge,
+                               Histogram, MetricsRegistry)
+from repro.obs.recorder import (POSTMORTEM_SCHEMA_VERSION,  # noqa: F401
+                                FlightRecorder)
 from repro.obs.trace import (TRACE_SCHEMA_VERSION, TraceError,  # noqa: F401
                              Tracer, for_sim_ms, for_sim_seconds, for_steps)
+from repro.obs.watch import (ALERTS_SCHEMA_VERSION, Rule,  # noqa: F401
+                             Watchtower, default_rules, load_rules,
+                             parse_rules)

@@ -18,12 +18,19 @@ CI-gateable artifacts exactly like traces and SLO reports.
 from __future__ import annotations
 
 import json
-import os
-from typing import Dict, List, Optional, Tuple, Union
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.obs.fsio import atomic_write_text
+
 METRICS_SCHEMA_VERSION = 1
+
+# bounded per-gauge history retained for windowed alert rules (min/max over
+# the last N sets). 64 samples cover every default rule window with room to
+# spare while keeping the per-gauge footprint constant.
+GAUGE_WINDOW = 64
 
 Number = Union[int, float]
 
@@ -52,15 +59,37 @@ class Counter:
 
 
 class Gauge:
-    """Last-set value."""
+    """Last-set value, plus a bounded window of recent sets.
 
-    __slots__ = ("value",)
+    The export (``to_dict``) is still just the last value — the gated
+    metrics artifacts did not move — but alert rules windowing over a
+    gauge (burn-rate, drift) need more than the final sample, so the last
+    ``GAUGE_WINDOW`` sets are retained deterministically.
+    """
+
+    __slots__ = ("value", "_hist")
 
     def __init__(self) -> None:
         self.value: Number = 0
+        self._hist: Deque[float] = deque(maxlen=GAUGE_WINDOW)
 
     def set(self, value: Number) -> None:
         self.value = value
+        self._hist.append(float(value))
+
+    def window(self, n: int = GAUGE_WINDOW) -> List[float]:
+        """The last ``min(n, GAUGE_WINDOW)`` set values, oldest first."""
+        if n <= 0:
+            raise ValueError(f"gauge window size {n} must be positive")
+        return list(self._hist)[-n:]
+
+    def window_min(self, n: int = GAUGE_WINDOW) -> float:
+        w = self.window(n)
+        return min(w) if w else 0.0
+
+    def window_max(self, n: int = GAUGE_WINDOW) -> float:
+        w = self.window(n)
+        return max(w) if w else 0.0
 
     def to_dict(self) -> Number:
         return self.value
@@ -76,15 +105,17 @@ class Histogram:
     must not move.
     """
 
-    __slots__ = ("buckets", "bucket_counts", "values", "_sum")
+    __slots__ = ("buckets", "bucket_counts", "values", "_sum", "name")
 
-    def __init__(self, buckets: Tuple[float, ...] = DEFAULT_BUCKETS):
+    def __init__(self, buckets: Tuple[float, ...] = DEFAULT_BUCKETS,
+                 name: str = ""):
         if list(buckets) != sorted(buckets):
             raise ValueError(f"bucket bounds must be sorted: {buckets}")
         self.buckets = tuple(float(b) for b in buckets)
         self.bucket_counts = [0] * (len(self.buckets) + 1)  # +overflow
         self.values: List[float] = []
         self._sum = 0.0
+        self.name = name
 
     def observe(self, value: Number) -> None:
         v = float(value)
@@ -104,29 +135,38 @@ class Histogram:
     def sum(self) -> float:
         return self._sum
 
-    def percentile(self, q: float) -> float:
-        """Exact percentile (q in [0, 100]); 0.0 on an empty histogram —
-        the convention of the fleet report it replaced."""
+    def _require_samples(self, what: str) -> None:
         if not self.values:
-            return 0.0
+            label = self.name or "histogram"
+            raise ValueError(
+                f"{what} of empty histogram {label!r}: no observations were "
+                f"recorded — guard the call with `if h.count` or observe a "
+                f"sample first")
+
+    def percentile(self, q: float) -> float:
+        """Exact percentile (q in [0, 100]); raises a ``ValueError`` naming
+        the metric on an empty histogram (a quantile of nothing is a bug at
+        the call site, not a zero)."""
+        self._require_samples(f"percentile({q:g})")
         return float(np.percentile(np.asarray(self.values), q))
 
     def quantile(self, q: float) -> float:
         """Exact quantile (q in [0, 1]) over the float64 sample — the
-        hedging-threshold convention it replaced."""
-        if not self.values:
-            return 0.0
+        hedging-threshold convention it replaced. Raises ``ValueError``
+        naming the metric when empty."""
+        self._require_samples(f"quantile({q:g})")
         return float(np.quantile(np.asarray(self.values, np.float64), q))
 
     def to_dict(self) -> Dict:
+        empty = not self.values
         d: Dict = {
             "count": self.count,
             "sum": self._sum,
             "min": min(self.values) if self.values else 0.0,
             "max": max(self.values) if self.values else 0.0,
-            "p50": self.percentile(50),
-            "p90": self.percentile(90),
-            "p99": self.percentile(99),
+            "p50": 0.0 if empty else self.percentile(50),
+            "p90": 0.0 if empty else self.percentile(90),
+            "p99": 0.0 if empty else self.percentile(99),
             "buckets": {},
         }
         for i, b in enumerate(self.buckets):
@@ -162,8 +202,21 @@ class MetricsRegistry:
     def histogram(self, name: str,
                   buckets: Optional[Tuple[float, ...]] = None) -> Histogram:
         if name not in self._histograms:
-            self._histograms[name] = Histogram(buckets or DEFAULT_BUCKETS)
+            self._histograms[name] = Histogram(buckets or DEFAULT_BUCKETS,
+                                               name=name)
         return self._histograms[name]
+
+    def peek(self, name: str):
+        """Non-creating lookup: the named counter/gauge/histogram, or
+        ``None``. Alert rules use this so watching a metric that a run
+        never emits does not materialize an empty stream in the export."""
+        if name in self._counters:
+            return self._counters[name]
+        if name in self._gauges:
+            return self._gauges[name]
+        if name in self._histograms:
+            return self._histograms[name]
+        return None
 
     def to_dict(self) -> Dict:
         return {
@@ -180,7 +233,4 @@ class MetricsRegistry:
         return json.dumps(self.to_dict(), sort_keys=True, indent=1)
 
     def save(self, path: str) -> None:
-        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        with open(path, "w") as f:
-            f.write(self.to_json())
-            f.write("\n")
+        atomic_write_text(path, self.to_json() + "\n")

@@ -35,8 +35,9 @@ ordering and arithmetic integer-exact and therefore reproducible.
 from __future__ import annotations
 
 import json
-import os
 from typing import Any, Dict, List, Optional, Tuple
+
+from repro.obs.fsio import atomic_write_text
 
 TRACE_SCHEMA_VERSION = 1
 
@@ -71,6 +72,10 @@ class Tracer:
         # (cat, id) -> stack of names for nestable-async balance
         self._open_async: Dict[Tuple[str, int], List[str]] = {}
         self._named: set = set()     # (kind, pid[, tid]) metadata emitted
+        # optional FlightRecorder (obs/recorder.py): offered every event as
+        # it is recorded so postmortem bundles can carry the last-N events
+        # even while spans are still open (to_dict() refuses dangling spans)
+        self.recorder: Optional[Any] = None
 
     # ---- helpers -----------------------------------------------------------
     def _ts(self, t: float) -> int:
@@ -81,6 +86,8 @@ class Tracer:
 
     def _push(self, ev: Dict[str, Any]) -> None:
         self._events.append((ev["ts"], self._seq, ev))
+        if self.recorder is not None:
+            self.recorder.offer(ev["ts"], self._seq, ev)
         self._seq += 1
 
     @staticmethod
@@ -239,10 +246,7 @@ class Tracer:
                           separators=(",", ":"))
 
     def save(self, path: str) -> None:
-        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        with open(path, "w") as f:
-            f.write(self.to_json())
-            f.write("\n")
+        atomic_write_text(path, self.to_json() + "\n")
 
 
 def for_sim_ms() -> Tracer:

@@ -78,13 +78,15 @@ class AsyncScheduler:
                  join_burn_in: int = 0,
                  log_every: int = 1,
                  max_sim_time: float = float("inf"),
-                 tracer=None, metrics=None):
+                 tracer=None, metrics=None, watch=None):
         self.model, self.tc, self.codist = model, tc, codist
         # observability (repro.obs) on the virtual cluster clock (simulated
         # seconds): per-peer step/publish/recover spans, mailbox staleness
-        # and comm counters. None = the run path is untouched.
+        # and comm counters. None = the run path is untouched. ``watch`` is
+        # an optional Watchtower evaluated once per scheduler round.
         self.tracer = tracer
         self.metrics = metrics
+        self.watch = watch
         self.batches = batches
         self.faults = faults
         self.schedule = FaultSchedule(faults, tc.total_steps)
@@ -270,6 +272,9 @@ class AsyncScheduler:
                     self.mailbox.drop_peer(p)
                     if self.tracer is not None:
                         self.tracer.instant("die", t, pid=p, cat="chaos")
+                    if self.watch is not None:
+                        self.watch.note_fault("fail", t,
+                                              {"peer": p, "step": peer.step})
                     if (self.recover_after is not None
                             and peer.can_recover(self.checkpoint_dir)):
                         pending_recoveries.append(
@@ -295,6 +300,11 @@ class AsyncScheduler:
                              float(self.mailbox.bytes_delivered)})
                     if self.metrics is not None:
                         self.metrics.counter("runtime/publishes").inc()
+                        # live staleness view for alert rules (same names
+                        # and final values as the end-of-run block below)
+                        for k, v in self.mailbox.stats.as_dict().items():
+                            self.metrics.gauge(
+                                f"runtime/mailbox_staleness_{k}").set(v)
             # phase 2: step
             for p in live:
                 peer = self.peers[p]
@@ -305,6 +315,8 @@ class AsyncScheduler:
                     clock.remove_peer(p)
                 else:
                     clock.advance(p, dur)
+            if self.watch is not None:
+                self.watch.evaluate(t)
 
         if self.metrics is not None:
             m = self.metrics

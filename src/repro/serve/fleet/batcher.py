@@ -181,6 +181,9 @@ class FleetEngine:
         # tests/test_obs.py's digest-equality test)
         self.tracer = tracer
         self.metrics = metrics
+        # optional Watchtower (obs/watch.py): evaluated once per tick on
+        # this engine's simulated clock; None = no alerting, no overhead
+        self.watch = None
         self._pid = peer_id + 1          # trace process row (0 = router)
         # chaos hooks (None/untouched on the clean path)
         self.chaos = None                # Optional[ChaosSchedule]
@@ -388,16 +391,23 @@ class FleetEngine:
         cost = (self.config.step_overhead_ms
                 + self.config.prefill_ms_per_token * admitted_tokens
                 + (self._decode_cost_ms() if decoded else 0.0))
+        slow_mult = 1.0
         if self.chaos is not None:
-            mult = self.chaos.slowdown(self.peer_id, tick)
-            cost *= mult
+            slow_mult = self.chaos.slowdown(self.peer_id, tick)
+            cost *= slow_mult
             if self.health is not None:
                 # the health signal IS the observed/clean cost ratio — what
                 # a real router would estimate from tick latencies
-                self.health.observe(mult)
+                self.health.observe(slow_mult)
         self.now_ms += cost
+        # first-token latencies must be read off before _evict pops any
+        # single-step slot out of the slot table
+        new_ttfts: List[float] = []
         for s in newly:
-            self.slots[s].record.first_token_ms = self.now_ms
+            rec = self.slots[s].record
+            rec.first_token_ms = self.now_ms
+            if rec.ttft_ms is not None:
+                new_ttfts.append(rec.ttft_ms)
         self._evict(self.now_ms)
         self.steps += 1
         self.peak_utilization = max(self.peak_utilization,
@@ -423,6 +433,13 @@ class FleetEngine:
                     pid=self._pid)
         if self.metrics is not None:
             self.metrics.histogram("fleet/tick_cost_ms").observe(cost)
+            self.metrics.gauge("fleet/kv_utilization").set(
+                round(self.pool.utilization(), 6))
+            for ttft in new_ttfts:
+                self.metrics.histogram("fleet/ttft_live_ms").observe(ttft)
+            if self.chaos is not None:
+                # the live straggler signal: observed/clean tick-cost ratio
+                self.metrics.gauge("fleet/slowdown").set(slow_mult)
             if admitted_tokens:
                 self.metrics.counter("fleet/prefill_tokens").inc(
                     admitted_tokens)
@@ -444,8 +461,17 @@ class FleetEngine:
                     self.tracer.complete("preempted", self.now_ms,
                                          self.offline_until_ms,
                                          pid=self._pid, cat="chaos")
+                if self.watch is not None:
+                    self.watch.note_fault(
+                        "preempt", self.now_ms,
+                        {"peer": self.peer_id, "pause_ms": pause,
+                         "live_rids": sorted(
+                             sl.record.request.rid
+                             for sl in self.slots.values())})
                 self.now_ms = self.offline_until_ms
                 self.preemptions_hit += 1
+        if self.watch is not None:
+            self.watch.evaluate(self.now_ms)
         return True
 
     def advance_to(self, t_ms: float) -> None:
@@ -482,6 +508,12 @@ class FleetEngine:
         if self.tracer is not None:
             self.tracer.instant("die", self.now_ms, pid=self._pid,
                                 cat="chaos")
+        if self.watch is not None:
+            self.watch.note_fault(
+                "fail", self.now_ms,
+                {"peer": self.peer_id,
+                 "live_rids": sorted(sl.record.request.rid
+                                     for sl in self.slots.values())})
 
     def revive(self, t_ms: float, params: Optional[PyTree] = None,
                version: Optional[int] = None) -> None:

@@ -98,6 +98,19 @@ class ChaosSchedule:
         """Tick at which the peer dies permanently (None = never)."""
         return self.sched.fails_at(peer)
 
+    def describe(self, peer: int, tick: int) -> Dict:
+        """Deterministic snapshot of the fault state one peer sees at one
+        tick — the Watchtower's postmortem bundles embed this so a dumped
+        alert names the injected cause next to the observed symptom."""
+        fails = self.fails_at(peer)
+        return {
+            "peer": peer,
+            "tick": tick,
+            "slowdown": self.slowdown(peer, tick),
+            "pause_ms": self.pause_ms(peer, tick),
+            "fails_at_tick": fails if fails is not None else -1,
+        }
+
 
 @dataclass(frozen=True)
 class FleetDefense:

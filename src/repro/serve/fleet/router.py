@@ -168,7 +168,7 @@ class FleetRouter:
                  staleness_bound: int = 0,
                  chaos: Optional[ChaosConfig] = None,
                  defense: Optional[FleetDefense] = None,
-                 tracer=None, metrics=None,
+                 tracer=None, metrics=None, watch=None,
                  spec: Optional[SpecConfig] = None,
                  draft_model=None, draft_params: PyTree = None):
         assert policy in POLICIES, (policy, POLICIES)
@@ -179,6 +179,9 @@ class FleetRouter:
         # run path is bit-identical to the uninstrumented router
         self.tracer = tracer
         self.metrics = metrics
+        # optional Watchtower (obs/watch.py): engines evaluate it per tick,
+        # the router once more after the end-of-run report gauges land
+        self.watch = watch
         if tracer is not None:
             tracer.name_process(ROUTER_PID, "router")
             tracer.name_process(REQUEST_PID, "requests")
@@ -226,6 +229,9 @@ class FleetRouter:
                                         peer_id=i, tracer=tracer,
                                         metrics=metrics)
                             for i, p in enumerate(peer_params)]
+        if watch is not None:
+            for eng in self.engines:
+                eng.watch = watch
         self.canary_every = canary_every
         self.snapshot_dir = snapshot_dir
         self.refresh_every_ms = refresh_every_ms
@@ -267,7 +273,8 @@ class FleetRouter:
         # reproduces the np.quantile math of the ad-hoc sample list it
         # replaced bit-for-bit
         self._size_hist = (metrics.histogram("router/hedge_size_tokens")
-                           if metrics is not None else Histogram())
+                           if metrics is not None
+                           else Histogram(name="router/hedge_size_tokens"))
         self._trace_close: Dict[int, float] = {}   # rid -> last child end
 
     # ---- peer selection ----------------------------------------------------
@@ -776,7 +783,12 @@ class FleetRouter:
         self._maybe_refresh(end_ms)
         for prec, srec in self._pairs:
             self.canary_stats.observe(prec, srec)
-        return self._report(workload, slo_ms, end_ms)
+        rep = self._report(workload, slo_ms, end_ms)
+        if self.watch is not None:
+            # one final evaluation after the report/canary gauges land, so
+            # end-of-run rules (canary divergence) see their signals
+            self.watch.evaluate(end_ms)
+        return rep
 
     def _finalize_trace(self, end_ms: float) -> None:
         """Flush any placement whose spans were never emitted (clean
@@ -813,8 +825,10 @@ class FleetRouter:
         ttfts = [r.ttft_ms for r in done]
         e2es = [r.e2e_ms for r in done]
         m = self.metrics
-        ttft_h = m.histogram("fleet/ttft_ms") if m is not None else Histogram()
-        e2e_h = m.histogram("fleet/e2e_ms") if m is not None else Histogram()
+        ttft_h = (m.histogram("fleet/ttft_ms") if m is not None
+                  else Histogram(name="fleet/ttft_ms"))
+        e2e_h = (m.histogram("fleet/e2e_ms") if m is not None
+                 else Histogram(name="fleet/e2e_ms"))
         for t in ttfts:
             ttft_h.observe(t)
         for t in e2es:
@@ -840,10 +854,10 @@ class FleetRouter:
             # client-facing rejections only: canary/ensemble shadows are
             # bookkeeping duplicates and must not read as shed client traffic
             rejected=sum(1 for r in self._primaries if r.rejected),
-            p50_ttft_ms=ttft_h.percentile(50),
-            p99_ttft_ms=ttft_h.percentile(99),
-            p50_e2e_ms=e2e_h.percentile(50),
-            p99_e2e_ms=e2e_h.percentile(99),
+            p50_ttft_ms=ttft_h.percentile(50) if ttft_h.count else 0.0,
+            p99_ttft_ms=ttft_h.percentile(99) if ttft_h.count else 0.0,
+            p50_e2e_ms=e2e_h.percentile(50) if e2e_h.count else 0.0,
+            p99_e2e_ms=e2e_h.percentile(99) if e2e_h.count else 0.0,
             slo_ms=slo_ms,
             slo_attainment=(sum(1 for t in ttfts if t <= slo_ms) / len(ttfts)
                             if ttfts else 0.0),
@@ -884,4 +898,10 @@ class FleetRouter:
             for k, v in rep.to_dict().items():
                 if isinstance(v, (int, float)) and not isinstance(v, bool):
                     m.gauge(f"report/{k}").set(v)
+            # the canary dict is skipped by the numeric mirror above, but
+            # its divergence numbers are exactly what the canary alert rule
+            # watches — surface them as gauges too
+            m.gauge("report/canary_mean_mse").set(rep.canary["mean_mse"])
+            m.gauge("report/canary_token_agreement").set(
+                rep.canary["token_agreement"])
         return rep

@@ -291,6 +291,13 @@ class SpecEngine(FleetEngine):
             self.metrics.counter("fleet/spec_drafted_tokens").inc(
                 k * len(live))
             self.metrics.counter("fleet/spec_accepted_tokens").inc(total_m)
+            # running accept rate across THIS engine's rounds: the live
+            # view of the label-free quality canary the accept-collapse
+            # alert rule watches (the report's spec_accept_rate is the
+            # same ratio aggregated fleet-wide at end of run)
+            self.metrics.gauge("fleet/spec_accept_rate").set(
+                round(self.spec_stats.accepted
+                      / max(1, self.spec_stats.drafted), 6))
         if self.tracer is not None:
             d0 = self.now_ms
             d1 = d0 + k * self.spec.draft_ms_per_token

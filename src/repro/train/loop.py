@@ -95,14 +95,16 @@ def train(model, tc: TrainConfig, batches: Callable[[int], Dict],
           eval_every: int = 0, log_every: int = 10,
           state=None, trainable: Optional[PyTree] = None,
           track_param_distance: bool = False,
-          tracer=None, metrics=None) -> tuple:
+          tracer=None, metrics=None, watch=None) -> tuple:
     """Generic strategy-driven loop. ``batches(step)`` returns the batch for
     that step (stacked with a leading n axis for codist strategies — it owns
     coordinated vs. independent sampling).
 
     ``tracer``/``metrics`` are optional ``repro.obs`` hooks on the step
     clock (one step renders as 1 ms): per-step spans with exchange markers
-    and comm-byte counters. ``None`` leaves the loop untouched."""
+    and comm-byte counters. ``watch`` is an optional Watchtower on the same
+    step clock, evaluated at each log point against the live
+    ``train/task_loss`` gauge. ``None`` leaves the loop untouched."""
     from repro.optim import make_optimizer
     opt_init, _ = make_optimizer(tc.optimizer, momentum=tc.momentum,
                                  b1=tc.adam_b1, b2=tc.adam_b2,
@@ -148,6 +150,19 @@ def train(model, tc: TrainConfig, batches: Callable[[int], Dict],
             if tracer is not None:
                 tracer.counter("comm", k, {"events": comm_events,
                                            "bytes": extra["comm_bytes"]})
+            if mreg is not None:
+                # live loss stream for alert rules: scalar runs log
+                # "task_loss", codist runs log one "task_loss_<i>" per
+                # peer — average the peers into one gauge
+                rec = hist.records[-1]
+                losses = [v for name, v in sorted(rec.items())
+                          if name == "task_loss"
+                          or name.startswith("task_loss_")]
+                if losses:
+                    mreg.gauge("train/task_loss").set(
+                        sum(losses) / len(losses))
+            if watch is not None:
+                watch.evaluate(k)
     if mreg is not None:
         mreg.counter("train/comm_events").inc(comm_events)
         mreg.counter("train/comm_bytes").inc(comm_events * bytes_per_event)
@@ -164,13 +179,13 @@ def train_allreduce(model, tc: TrainConfig, batches: Iterator[Dict],
                     eval_every: int = 0, log_every: int = 10,
                     state=None, trainable: Optional[PyTree] = None,
                     track_param_distance: bool = False,
-                    tracer=None, metrics=None) -> tuple:
+                    tracer=None, metrics=None, watch=None) -> tuple:
     it = iter(batches)
     return train(model, tc, lambda k: next(it), AllReduce(),
                  eval_batches=eval_batches, eval_every=eval_every,
                  log_every=log_every, state=state, trainable=trainable,
                  track_param_distance=track_param_distance,
-                 tracer=tracer, metrics=metrics)
+                 tracer=tracer, metrics=metrics, watch=watch)
 
 
 def train_codist(model, codist: CodistConfig, tc: TrainConfig,
@@ -180,7 +195,7 @@ def train_codist(model, codist: CodistConfig, tc: TrainConfig,
                  state=None, trainable: Optional[PyTree] = None,
                  track_param_distance: bool = False,
                  strategy: Optional[ExchangeStrategy] = None,
-                 tracer=None, metrics=None) -> tuple:
+                 tracer=None, metrics=None, watch=None) -> tuple:
     """Codistillation loop; the mechanism comes from ``strategy`` (explicit
     instance, e.g. ``ShardMapCompressed``) or ``resolve_strategy(codist)``."""
     strategy = strategy if strategy is not None else resolve_strategy(codist)
@@ -188,7 +203,7 @@ def train_codist(model, codist: CodistConfig, tc: TrainConfig,
                  eval_batches=eval_batches, eval_every=eval_every,
                  log_every=log_every, state=state, trainable=trainable,
                  track_param_distance=track_param_distance,
-                 tracer=tracer, metrics=metrics)
+                 tracer=tracer, metrics=metrics, watch=watch)
 
 
 def stack_batches(batch_list: List[Dict]) -> Dict:

@@ -130,9 +130,26 @@ class TestMetrics:
         assert h.quantile(0.9) == float(np.quantile(
             np.asarray(vals, np.float64), 0.9))
 
-    def test_empty_histogram_quantile_is_zero(self):
-        assert Histogram().percentile(99) == 0.0
-        assert Histogram().quantile(0.9) == 0.0
+    def test_empty_histogram_quantile_raises_with_metric_name(self):
+        # silent 0.0 on an empty histogram masked missing-instrumentation
+        # bugs; the error must name the metric so the call site is findable
+        with pytest.raises(ValueError, match="fleet/ttft_ms"):
+            Histogram(name="fleet/ttft_ms").percentile(99)
+        with pytest.raises(ValueError, match="histogram"):
+            Histogram().quantile(0.9)
+        # export still serializes an empty histogram (0.0 placeholders)
+        assert Histogram(name="x").to_dict()["p50"] == 0.0
+
+    def test_gauge_windowed_min_max(self):
+        g = Gauge()
+        assert (g.window_min(), g.window_max()) == (0.0, 0.0)
+        for v in (3.0, 1.0, 4.0, 1.5):
+            g.set(v)
+        assert g.window(2) == [4.0, 1.5]
+        assert g.window_min() == 1.0 and g.window_max() == 4.0
+        assert g.window_min(2) == 1.5 and g.window_max(3) == 4.0
+        with pytest.raises(ValueError, match="window"):
+            g.window(0)
 
     def test_registry_get_or_create_and_export(self):
         m = MetricsRegistry()

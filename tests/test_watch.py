@@ -1,0 +1,327 @@
+"""Watchtower + flight-recorder tests: rule parsing names the offending
+clause, fire/resolve hysteresis, burn-rate and EWMA-drift semantics, alert
+JSONL bit-determinism across seeded chaos runs, flight-recorder ring/dump
+bounds, and the overhead-off guarantee (alerting enabled leaves the gated
+fleet report byte-identical).
+"""
+import json
+import os
+import sys
+from dataclasses import replace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import build_model
+from repro.obs import (ALERTS_SCHEMA_VERSION, POSTMORTEM_SCHEMA_VERSION,
+                       FlightRecorder, MetricsRegistry, Rule, Watchtower,
+                       default_rules, for_sim_ms, load_rules, parse_rules)
+from repro.runtime import FaultConfig
+from repro.serve.fleet import (ChaosConfig, FleetConfig, FleetDefense,
+                               FleetRouter, Request)
+
+TOOLS = os.path.join(os.path.dirname(__file__), "..", "tools")
+sys.path.insert(0, TOOLS)
+import ci_bitcheck  # noqa: E402
+import trace_check  # noqa: E402
+
+
+def _rule(**kw):
+    base = dict(name="r", metric="m", kind="threshold", op=">", value=1.0)
+    base.update(kw)
+    return parse_rules([base])[0]
+
+
+# ----------------------------------------------------------------------------
+# rule parsing: malformed specs name the offending clause
+# ----------------------------------------------------------------------------
+
+class TestRuleParsing:
+    def test_unknown_key_named(self):
+        with pytest.raises(ValueError, match=r"'windoww'"):
+            _rule(windoww=4)
+
+    def test_missing_required_key_named(self):
+        with pytest.raises(ValueError, match="missing required key 'op'"):
+            parse_rules([{"name": "x", "metric": "m", "kind": "threshold",
+                          "value": 1.0}])
+
+    def test_bad_name_rejected(self):
+        # dots would break ci_bitcheck's dotted-path --expect clauses
+        with pytest.raises(ValueError, match=r"'bad\.dot'"):
+            _rule(name="bad.dot")
+
+    def test_bad_kind_op_signal_severity(self):
+        with pytest.raises(ValueError, match="kind 'spline'"):
+            _rule(kind="spline")
+        with pytest.raises(ValueError, match="op '~'"):
+            _rule(op="~")
+        with pytest.raises(ValueError, match="signal 'p17'"):
+            _rule(signal="p17")
+        with pytest.raises(ValueError, match="severity 'mild'"):
+            _rule(severity="mild")
+
+    def test_int_and_unit_interval_bounds(self):
+        with pytest.raises(ValueError, match="window 0"):
+            _rule(window=0)
+        with pytest.raises(ValueError, match="fire_after"):
+            _rule(fire_after=-1)
+        with pytest.raises(ValueError, match="alpha"):
+            _rule(alpha=1.5)
+        with pytest.raises(ValueError, match="budget"):
+            _rule(budget=0.0)
+
+    def test_duplicate_names_rejected(self):
+        spec = dict(name="dup", metric="m", kind="threshold", op=">",
+                    value=1.0)
+        with pytest.raises(ValueError, match="duplicate"):
+            parse_rules([spec, dict(spec)])
+
+    def test_load_rules_both_forms(self, tmp_path):
+        specs = [dict(name="a", metric="m", kind="threshold", op=">",
+                      value=1.0)]
+        bare = tmp_path / "bare.json"
+        bare.write_text(json.dumps(specs))
+        wrapped = tmp_path / "wrapped.json"
+        wrapped.write_text(json.dumps({"rules": specs}))
+        assert load_rules(str(bare)) == load_rules(str(wrapped))
+        bad = tmp_path / "bad.json"
+        bad.write_text(json.dumps({"rule": specs}))
+        with pytest.raises(ValueError, match="'rules' key"):
+            load_rules(str(bad))
+
+    def test_default_pack_parses_and_covers_the_catalog(self):
+        names = {r.name for r in default_rules(slo_ms=25.0)}
+        assert {"straggler-slowdown", "spec-accept-collapse",
+                "canary-divergence", "mailbox-staleness", "slo-burn-rate",
+                "kv-pool-saturation", "loss-gap-drift"} <= names
+
+
+# ----------------------------------------------------------------------------
+# engine semantics: hysteresis, burn rate, drift
+# ----------------------------------------------------------------------------
+
+class TestEngine:
+    def test_fire_resolve_hysteresis(self):
+        m = MetricsRegistry()
+        w = Watchtower(m, [_rule(metric="g", fire_after=2, resolve_after=2)],
+                       unit_us=1000.0, clock="test")
+        seq = [5.0, 5.0, 0.0, 5.0, 0.0, 0.0, 0.0]
+        events = []
+        for t, v in enumerate(seq):
+            m.gauge("g").set(v)
+            events += w.evaluate(t)
+        # breach at t=0 does not fire (streak 1 < fire_after 2); t=1 fires;
+        # the single recovery at t=2 does NOT resolve and the breach at t=3
+        # resets the ok-streak; only t=4..5 back-to-back recoveries resolve
+        assert [(e["ts"], e["state"]) for e in events] == [
+            (1000, "firing"), (5000, "resolved")]
+        assert w.firing() == []
+        assert w.summary()["counts"] == {"r__firing": 1, "r__resolved": 1}
+
+    def test_no_data_leaves_streaks_untouched(self):
+        m = MetricsRegistry()
+        w = Watchtower(m, [_rule(metric="absent")])
+        assert w.evaluate(0) == [] and w.n_events == 0
+        # min_count gate: a histogram below min_count is skipped too
+        w2 = Watchtower(m, [_rule(metric="h", min_count=3)])
+        m.histogram("h").observe(99.0)
+        assert w2.evaluate(0) == []
+
+    def test_burn_rate_budget(self):
+        m = MetricsRegistry()
+        rule = _rule(metric="lat", kind="burn_rate", op=">", value=50.0,
+                     window=4, budget=0.5)
+        w = Watchtower(m, [rule])
+        h = m.histogram("lat")
+        for v in (10.0, 60.0, 10.0, 10.0):   # 1/4 breaching < budget
+            h.observe(v)
+        assert w.evaluate(0) == []
+        h.observe(70.0)                      # window now 60,10,10,70 -> 2/4
+        ev = w.evaluate(1)
+        assert ev and ev[0]["state"] == "firing" and ev[0]["value"] == 0.5
+
+    def test_ewma_drift_watches_change_then_self_resolves(self):
+        m = MetricsRegistry()
+        w = Watchtower(m, [_rule(metric="g", kind="ewma_drift", op=">",
+                                 value=0.5, alpha=0.5)])
+        m.gauge("g").set(1.0)
+        assert w.evaluate(0) == []           # seeds the baseline, no breach
+        m.gauge("g").set(3.0)                # drift 2.0 > 0.5 -> fires
+        assert w.evaluate(1)[0]["state"] == "firing"
+        events = []
+        for t in range(2, 8):                # level holds; baseline catches up
+            events += w.evaluate(t)
+        assert [e["state"] for e in events] == ["resolved"]
+
+    def test_jsonl_canonical_and_validates(self, tmp_path):
+        m = MetricsRegistry()
+        w = Watchtower(m, [_rule(metric="g")])
+        m.gauge("g").set(9.0)
+        w.evaluate(2)
+        path = tmp_path / "alerts.jsonl"
+        w.save(str(path))
+        head = json.loads(path.read_text().splitlines()[0])
+        assert head["schema_version"] == ALERTS_SCHEMA_VERSION
+        assert head["kind"] == "alerts"
+        assert trace_check.main([str(path)]) == 0
+        # ci_bitcheck's JSONL loader exposes the fire counts
+        assert ci_bitcheck.main([str(path), str(path), "--require",
+                                 "schema_version",
+                                 "--expect", "counts.r__firing>=1"]) == 0
+
+    def test_negative_time_rejected(self):
+        w = Watchtower(MetricsRegistry(), [_rule(metric="g")])
+        with pytest.raises(ValueError, match="negative"):
+            w.evaluate(-1.0)
+
+
+# ----------------------------------------------------------------------------
+# flight recorder bounds
+# ----------------------------------------------------------------------------
+
+class TestFlightRecorder:
+    def test_ring_bound_enforced(self, tmp_path):
+        fr = FlightRecorder(str(tmp_path), capacity=4)
+        for i in range(10):
+            fr.offer(i, i, {"ts": i, "name": f"e{i}"})
+        evs = fr.events()
+        assert len(evs) == 4 and evs[0]["ts"] == 6 and evs[-1]["ts"] == 9
+        assert fr.n_offered == 10
+
+    def test_dump_budget_and_schema(self, tmp_path):
+        fr = FlightRecorder(str(tmp_path), capacity=4, max_dumps=1)
+        fr.offer(0, 0, {"ts": 0, "name": "e"})
+        p1 = fr.dump("alert-test", 5)
+        assert p1 and os.path.exists(p1)
+        assert fr.dump("alert-again", 6) is None     # budget spent
+        assert len(fr.dumped) == 1
+        doc = json.loads(open(p1).read())
+        assert doc["schema_version"] == POSTMORTEM_SCHEMA_VERSION
+        assert doc["kind"] == "postmortem" and doc["n_events_seen"] == 1
+        assert trace_check.main([p1]) == 0
+
+    def test_invalid_bounds_rejected(self, tmp_path):
+        with pytest.raises(ValueError, match="capacity"):
+            FlightRecorder(str(tmp_path), capacity=0)
+        with pytest.raises(ValueError, match="max_dumps"):
+            FlightRecorder(str(tmp_path), max_dumps=0)
+
+    def test_dumps_on_firing_not_resolve(self, tmp_path):
+        fr = FlightRecorder(str(tmp_path))
+        assert fr.on_alert({"rule": "x", "state": "resolved", "ts": 1}) \
+            is None
+        assert fr.on_alert({"rule": "x", "state": "firing", "ts": 2})
+
+
+# ----------------------------------------------------------------------------
+# end-to-end on the chaos fleet (shared tiny-model fixtures mirror
+# tests/test_obs.py)
+# ----------------------------------------------------------------------------
+
+def _tiny_cfg():
+    return replace(get_reduced("qwen1.5-0.5b"), num_layers=2, d_model=64,
+                   d_ff=128, vocab_size=64, num_heads=2, num_kv_heads=2,
+                   head_dim=32)
+
+
+def _requests(cfg, lens, max_new=5, gap_ms=4.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(i, i * gap_ms,
+                    tuple(int(x) for x in rng.integers(0, cfg.padded_vocab,
+                                                       size=l)), max_new)
+            for i, l in enumerate(lens)]
+
+
+class _ListWorkload:
+    def __init__(self, requests, scenario="custom", seed=0):
+        self.requests = requests
+        self.scenario = scenario
+        self.seed = seed
+
+
+def _fleet_fc():
+    return FleetConfig(max_slots=2, block_size=4, num_blocks=32,
+                       max_blocks_per_slot=8, max_queue=32)
+
+
+@pytest.fixture(scope="module")
+def fleet_setup():
+    cfg = _tiny_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    wl = _ListWorkload(_requests(cfg, [5, 9, 12, 7] * 4))
+    return model, params, wl
+
+
+_PREEMPT = ((0, 6, 150.0),)   # peer 0: peer 1 straggles too hard to reach it
+
+# fires while any engine holds live KV (utilization is recorded before
+# eviction, so it never reads 0 — this rule only ever fires)
+_KV_RULE = Rule(name="kv-busy", metric="fleet/kv_utilization",
+                kind="threshold", op=">", value=0.0, signal="window_max",
+                window=2, resolve_after=2)
+
+
+def _chaos_watch_run(fleet_setup, out_dir):
+    model, params, wl = fleet_setup
+    # the CI smoke scenario: a short-horizon straggler episode that both
+    # starts and ends mid-run (fire AND resolve), plus one preemption
+    chaos = ChaosConfig(FaultConfig(n_peers=2, seed=0,
+                                    straggler_peers=(1,),
+                                    straggler_factor=6.0,
+                                    straggler_frac=0.9, straggler_len=6,
+                                    preemptions=_PREEMPT),
+                        horizon_ticks=12)
+    rules = [r for r in default_rules()
+             if r.name == "straggler-slowdown"] + [_KV_RULE]
+    mreg = MetricsRegistry()
+    watch = Watchtower(mreg, rules, unit_us=1000.0, clock="sim_ms")
+    tracer = for_sim_ms()
+    recorder = FlightRecorder(out_dir, capacity=32, metrics=mreg)
+    tracer.recorder = recorder
+    watch.on_alert(recorder.on_alert)
+    watch.on_fault(recorder.on_fault)
+    rep = FleetRouter(model, [params, params], config=_fleet_fc(),
+                      chaos=chaos, defense=FleetDefense(), tracer=tracer,
+                      metrics=mreg, watch=watch).run(wl)
+    bundles = [open(p).read() for p in recorder.dumped]
+    return rep, watch, bundles
+
+
+def test_chaos_alert_log_bit_identical(fleet_setup, tmp_path):
+    """Two seeded chaos runs emit byte-identical alert JSONL and
+    postmortem bundles, with the kv alert both firing and resolving and
+    the preemption fault captured as a bundle."""
+    a = _chaos_watch_run(fleet_setup, str(tmp_path / "a"))
+    b = _chaos_watch_run(fleet_setup, str(tmp_path / "b"))
+    assert a[1].to_jsonl() == b[1].to_jsonl()
+    assert a[2] == b[2] and a[2], "no postmortem bundles dumped"
+    counts = a[1].summary()["counts"]
+    assert counts.get("kv-busy__firing", 0) >= 1
+    assert counts.get("straggler-slowdown__firing", 0) >= 1
+    assert counts.get("straggler-slowdown__resolved", 0) >= 1
+    reasons = [json.loads(doc)["reason"] for doc in a[2]]
+    assert any(r.startswith("fault-preempt") for r in reasons)
+    assert any(r.startswith("alert-") for r in reasons)
+    path = tmp_path / "alerts.jsonl"
+    a[1].save(str(path))
+    assert trace_check.main([str(path)]) == 0
+
+
+def test_watchtower_does_not_perturb_the_fleet(fleet_setup, tmp_path):
+    """Overhead-off from the other side: full watchtower + flight
+    recorder enabled produces a byte-identical gated FleetReport to the
+    uninstrumented run."""
+    model, params, wl = fleet_setup
+    plain = FleetRouter(model, [params, params], config=_fleet_fc()).run(wl)
+    mreg = MetricsRegistry()
+    watch = Watchtower(mreg, default_rules(), unit_us=1000.0)
+    recorder = FlightRecorder(str(tmp_path), metrics=mreg)
+    watch.on_alert(recorder.on_alert)
+    watch.on_fault(recorder.on_fault)
+    instrumented = FleetRouter(model, [params, params], config=_fleet_fc(),
+                               metrics=mreg, watch=watch).run(wl)
+    assert plain.to_json() == instrumented.to_json()

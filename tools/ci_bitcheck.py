@@ -19,7 +19,9 @@ Checks, in order:
      DIFFERENT runs that must agree on specific fields (e.g. the
      speculative run's ``stream_digest`` vs the plain run's).
   2. ``--require`` keys exist in RUN1 (parsed as JSON; dotted paths
-     descend into nested objects).
+     descend into nested objects). JSONL artifacts (Watchtower alert
+     logs) parse into a synthetic doc: header fields at the top level,
+     ``counts.<rule>__<state>`` tallies, ``n_lines``/``n_events``.
   3. ``--expect`` invariants hold on RUN1: ``key OP value`` with OP one of
      ``== != >= <= > <`` (numeric when both sides parse as numbers,
      string equality otherwise).
@@ -64,13 +66,45 @@ def _coerce(text: str):
     return text.strip("\"'")
 
 
+def _load_jsonl(text: str, path: str):
+    """Parse a JSONL artifact (e.g. Watchtower alert logs) into one
+    queryable doc: header fields (``schema_version``/``kind``/...) are
+    lifted to the top level, and event lines carrying ``rule``+``state``
+    are tallied into ``counts.<rule>__<state>`` so smoke jobs can gate on
+    e.g. ``--expect "counts.straggler-slowdown__firing>=1"``."""
+    lines = []
+    for n, raw in enumerate(text.splitlines(), 1):
+        if not raw.strip():
+            continue
+        try:
+            lines.append(json.loads(raw))
+        except json.JSONDecodeError as e:
+            print(f"ci_bitcheck: cannot parse {path} line {n}: {e}",
+                  file=sys.stderr)
+            sys.exit(2)
+    doc: dict = {"jsonl": True, "n_lines": len(lines), "counts": {}}
+    if lines and isinstance(lines[0], dict) and "schema_version" in lines[0]:
+        doc.update(lines[0])
+        lines = lines[1:]
+    for ev in lines:
+        if isinstance(ev, dict) and "rule" in ev and "state" in ev:
+            key = f"{ev['rule']}__{ev['state']}"
+            doc["counts"][key] = doc["counts"].get(key, 0) + 1
+    doc["n_events"] = len(lines)
+    return doc
+
+
 def _load_json(path: str):
     try:
         with open(path) as f:
-            return json.load(f)
-    except (OSError, json.JSONDecodeError) as e:
+            text = f.read()
+    except OSError as e:
         print(f"ci_bitcheck: cannot parse {path}: {e}", file=sys.stderr)
         sys.exit(2)
+    try:
+        return json.loads(text)
+    except json.JSONDecodeError:
+        return _load_jsonl(text, path)
 
 
 def main(argv: List[str] | None = None) -> int:

@@ -1,0 +1,393 @@
+#!/usr/bin/env python3
+"""Render repro.obs artifacts into a self-contained postmortem dashboard.
+
+    python tools/obs_report.py --out dash.html \
+        [--trace t.json] [--metrics m.json] [--alerts a.jsonl] \
+        [--report r.json] [--postmortems DIR] [--format html|md] \
+        [--title TITLE]
+
+Pulls together whatever subset of artifacts a run produced — Perfetto
+trace, metrics registry dump, Watchtower alert JSONL, gated report JSON,
+flight-recorder postmortem bundles — into ONE dependency-free document:
+
+  * run summary table (report JSON scalars, or ``report/*`` gauges);
+  * latency / histogram percentiles from the metrics dump;
+  * the alert log as a table (fire/resolve transitions, severities);
+  * HTML only: inline-SVG timelines of every trace counter series with
+    alert transitions (solid rules) and fault/chaos instants (dashed)
+    annotated at their simulated timestamps;
+  * postmortem bundle index (reason, ts, ring depth).
+
+Determinism contract (CI-gated): the output is a pure function of the
+input files — sorted iteration everywhere, no wall-clock stamps — so two
+renders of the same artifacts are byte-identical. Stdlib only.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import html
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+SVG_W, SVG_H, SVG_PAD = 640, 120, 30
+
+_SEV_COLOR = {"info": "#2b6cb0", "warning": "#b7791f", "critical": "#c53030"}
+
+
+# ----------------------------------------------------------------------------
+# artifact loading
+# ----------------------------------------------------------------------------
+
+def _load(path: Optional[str]) -> Optional[Dict]:
+    if not path:
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _load_alerts(path: Optional[str]) -> Tuple[Optional[Dict], List[Dict]]:
+    """(header, events) from a Watchtower JSONL."""
+    if not path:
+        return None, []
+    with open(path) as f:
+        lines = [json.loads(ln) for ln in f if ln.strip()]
+    if lines and lines[0].get("kind") == "alerts":
+        return lines[0], lines[1:]
+    return None, lines
+
+
+def _load_postmortems(dirpath: Optional[str]) -> List[Tuple[str, Dict]]:
+    if not dirpath:
+        return []
+    out = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "postmortem_*.json"))):
+        with open(path) as f:
+            out.append((os.path.basename(path), json.load(f)))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# section builders (format-agnostic rows)
+# ----------------------------------------------------------------------------
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def summary_rows(report: Optional[Dict],
+                 metrics: Optional[Dict]) -> List[Tuple[str, str]]:
+    """Flat scalars from the gated report, else the report/* gauges the
+    fleet mirrors into the registry."""
+    if report:
+        return [(k, _fmt(v)) for k, v in sorted(report.items())
+                if isinstance(v, (int, float, str, bool))]
+    if metrics:
+        return [(k.split("/", 1)[1], _fmt(v))
+                for k, v in sorted(metrics.get("gauges", {}).items())
+                if k.startswith("report/")]
+    return []
+
+
+def histogram_rows(metrics: Optional[Dict]) -> List[List[str]]:
+    rows = []
+    for name, h in sorted((metrics or {}).get("histograms", {}).items()):
+        rows.append([name] + [_fmt(h.get(k, 0))
+                              for k in ("count", "mean", "p50", "p90",
+                                        "p99", "max")])
+    return rows
+
+
+def alert_rows(events: List[Dict]) -> List[List[str]]:
+    rows = []
+    for ev in events:
+        rows.append([_fmt(ev.get("ts")), ev.get("rule", "?"),
+                     ev.get("state", "?"), ev.get("severity", "?"),
+                     ev.get("metric", "?"),
+                     _fmt(ev.get("value", "")),
+                     f"{ev.get('op', '?')} {_fmt(ev.get('threshold', ''))}"])
+    return rows
+
+
+def counter_series(trace: Optional[Dict]) -> Dict[str, List[Tuple[int, float]]]:
+    """``name/series`` -> [(ts, value)] from the trace's C events."""
+    series: Dict[str, List[Tuple[int, float]]] = {}
+    for ev in (trace or {}).get("traceEvents", []):
+        if ev.get("ph") != "C":
+            continue
+        for key, val in sorted((ev.get("args") or {}).items()):
+            if isinstance(val, (int, float)) and not isinstance(val, bool):
+                series.setdefault(f"{ev.get('name', '?')}/{key}", []).append(
+                    (ev.get("ts", 0), float(val)))
+    return {k: sorted(v) for k, v in sorted(series.items())}
+
+
+def fault_instants(trace: Optional[Dict]) -> List[Tuple[int, str]]:
+    """(ts, label) for chaos/fault instant markers in the trace."""
+    out = []
+    for ev in (trace or {}).get("traceEvents", []):
+        if ev.get("ph") in ("i", "n") and (
+                ev.get("cat") in ("chaos", "fault")
+                or ev.get("name") in ("preempt", "fail", "die")):
+            out.append((ev.get("ts", 0), ev.get("name", "?")))
+    return sorted(out)
+
+
+# ----------------------------------------------------------------------------
+# SVG timeline (html format only)
+# ----------------------------------------------------------------------------
+
+def _svg_timeline(name: str, points: List[Tuple[int, float]],
+                  alerts: List[Dict], faults: List[Tuple[int, str]]) -> str:
+    if len(points) < 2:
+        return ""
+    xs = [p[0] for p in points]
+    ys = [p[1] for p in points]
+    x0, x1 = min(xs), max(xs)
+    y0, y1 = min(ys), max(ys)
+    xspan = (x1 - x0) or 1
+    yspan = (y1 - y0) or 1.0
+
+    def X(t: float) -> float:
+        return SVG_PAD + (t - x0) / xspan * (SVG_W - 2 * SVG_PAD)
+
+    def Y(v: float) -> float:
+        return (SVG_H - SVG_PAD
+                - (v - y0) / yspan * (SVG_H - 2 * SVG_PAD))
+
+    pts = " ".join(f"{X(t):.1f},{Y(v):.1f}" for t, v in points)
+    parts = [f'<svg viewBox="0 0 {SVG_W} {SVG_H}" width="{SVG_W}" '
+             f'height="{SVG_H}" role="img">',
+             f'<title>{html.escape(name)}</title>',
+             f'<rect width="{SVG_W}" height="{SVG_H}" fill="#fafafa"/>',
+             f'<polyline points="{pts}" fill="none" stroke="#2b6cb0" '
+             'stroke-width="1.5"/>']
+    for ts, label in faults:
+        if x0 <= ts <= x1:
+            x = X(ts)
+            parts.append(f'<line x1="{x:.1f}" y1="{SVG_PAD}" x2="{x:.1f}" '
+                         f'y2="{SVG_H - SVG_PAD}" stroke="#718096" '
+                         'stroke-dasharray="3,3" stroke-width="1">'
+                         f'<title>fault {html.escape(label)} @ {ts}</title>'
+                         '</line>')
+    for ev in alerts:
+        ts = ev.get("ts", 0)
+        if x0 <= ts <= x1:
+            x = X(ts)
+            color = _SEV_COLOR.get(ev.get("severity", ""), "#c53030")
+            dash = "" if ev.get("state") == "firing" else \
+                ' stroke-dasharray="6,2"'
+            parts.append(
+                f'<line x1="{x:.1f}" y1="{SVG_PAD}" x2="{x:.1f}" '
+                f'y2="{SVG_H - SVG_PAD}" stroke="{color}" '
+                f'stroke-width="1.5"{dash}>'
+                f'<title>{html.escape(ev.get("rule", "?"))} '
+                f'{html.escape(ev.get("state", "?"))} @ {ts}</title></line>')
+    parts.append(f'<text x="{SVG_PAD}" y="12" font-size="11" '
+                 f'fill="#4a5568">{html.escape(name)}  '
+                 f'[{_fmt(y0)} .. {_fmt(y1)}]</text>')
+    parts.append("</svg>")
+    return "".join(parts)
+
+
+# ----------------------------------------------------------------------------
+# renderers
+# ----------------------------------------------------------------------------
+
+def _md_table(headers: List[str], rows: List[List[str]]) -> List[str]:
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in headers) + "|"]
+    for row in rows:
+        out.append("| " + " | ".join(str(c) for c in row) + " |")
+    return out
+
+
+def render_md(title: str, report, metrics, alerts_head, alerts, trace,
+              bundles) -> str:
+    lines = [f"# {title}", ""]
+    if alerts_head:
+        lines += [f"Clock: `{alerts_head.get('clock', '?')}` "
+                  f"(unit {_fmt(alerts_head.get('unit_us', '?'))} µs), "
+                  f"{alerts_head.get('n_rules', '?')} rules evaluated.", ""]
+    srows = summary_rows(report, metrics)
+    if srows:
+        lines += ["## Run summary", ""]
+        lines += _md_table(["metric", "value"], [list(r) for r in srows])
+        lines.append("")
+    hrows = histogram_rows(metrics)
+    if hrows:
+        lines += ["## Latency / distributions", ""]
+        lines += _md_table(["histogram", "count", "mean", "p50", "p90",
+                            "p99", "max"], hrows)
+        lines.append("")
+    lines += ["## Alerts", ""]
+    if alerts:
+        lines += _md_table(["ts", "rule", "state", "severity", "metric",
+                            "value", "bound"], alert_rows(alerts))
+    else:
+        lines.append("No alert transitions recorded.")
+    lines.append("")
+    faults = fault_instants(trace)
+    if faults:
+        lines += ["## Fault / chaos events", ""]
+        lines += _md_table(["ts", "event"],
+                           [[str(t), n] for t, n in faults])
+        lines.append("")
+    if bundles:
+        lines += ["## Postmortem bundles", ""]
+        lines += _md_table(
+            ["file", "reason", "ts", "ring events", "events seen"],
+            [[name, b.get("reason", "?"), _fmt(b.get("ts", "?")),
+              str(len(b.get("events", []))), _fmt(b.get("n_events_seen", 0))]
+             for name, b in bundles])
+        lines.append("")
+    return "\n".join(lines).rstrip() + "\n"
+
+
+def _html_table(headers: List[str], rows: List[List[str]]) -> str:
+    head = "".join(f"<th>{html.escape(h)}</th>" for h in headers)
+    body = "".join(
+        "<tr>" + "".join(f"<td>{html.escape(str(c))}</td>" for c in row)
+        + "</tr>" for row in rows)
+    return f"<table><thead><tr>{head}</tr></thead><tbody>{body}</tbody></table>"
+
+
+def render_html(title: str, report, metrics, alerts_head, alerts, trace,
+                bundles) -> str:
+    parts = [
+        "<!DOCTYPE html>",
+        '<html lang="en"><head><meta charset="utf-8">',
+        f"<title>{html.escape(title)}</title>",
+        "<style>",
+        "body{font:14px/1.5 system-ui,sans-serif;margin:2em auto;"
+        "max-width:72em;color:#1a202c;padding:0 1em}",
+        "table{border-collapse:collapse;margin:0.5em 0}",
+        "th,td{border:1px solid #cbd5e0;padding:0.25em 0.6em;"
+        "text-align:left;font-variant-numeric:tabular-nums}",
+        "th{background:#edf2f7}",
+        "h1,h2{border-bottom:1px solid #e2e8f0;padding-bottom:0.2em}",
+        ".firing{color:#c53030;font-weight:600}",
+        ".resolved{color:#2f855a}",
+        "svg{display:block;margin:0.75em 0;border:1px solid #e2e8f0}",
+        "</style></head><body>",
+        f"<h1>{html.escape(title)}</h1>",
+    ]
+    if alerts_head:
+        parts.append(
+            f"<p>Clock: <code>{html.escape(str(alerts_head.get('clock')))}"
+            f"</code> (unit {_fmt(alerts_head.get('unit_us', '?'))} µs), "
+            f"{alerts_head.get('n_rules', '?')} rules evaluated.</p>")
+    srows = summary_rows(report, metrics)
+    if srows:
+        parts.append("<h2>Run summary</h2>")
+        parts.append(_html_table(["metric", "value"], [list(r) for r in srows]))
+    hrows = histogram_rows(metrics)
+    if hrows:
+        parts.append("<h2>Latency / distributions</h2>")
+        parts.append(_html_table(["histogram", "count", "mean", "p50",
+                                  "p90", "p99", "max"], hrows))
+    parts.append("<h2>Alerts</h2>")
+    if alerts:
+        head = ["ts", "rule", "state", "severity", "metric", "value",
+                "bound"]
+        body = "".join(
+            "<tr>"
+            f"<td>{ev.get('ts')}</td>"
+            f"<td>{html.escape(ev.get('rule', '?'))}</td>"
+            f"<td class=\"{html.escape(ev.get('state', ''))}\">"
+            f"{html.escape(ev.get('state', '?'))}</td>"
+            f"<td>{html.escape(ev.get('severity', '?'))}</td>"
+            f"<td>{html.escape(ev.get('metric', '?'))}</td>"
+            f"<td>{html.escape(_fmt(ev.get('value', '')))}</td>"
+            f"<td>{html.escape(ev.get('op', '?'))} "
+            f"{html.escape(_fmt(ev.get('threshold', '')))}</td></tr>"
+            for ev in alerts)
+        parts.append(
+            "<table><thead><tr>"
+            + "".join(f"<th>{h}</th>" for h in head)
+            + f"</tr></thead><tbody>{body}</tbody></table>")
+    else:
+        parts.append("<p>No alert transitions recorded.</p>")
+    series = counter_series(trace)
+    if series:
+        faults = fault_instants(trace)
+        parts.append("<h2>Timelines</h2>")
+        parts.append("<p>Trace counters over simulated time; solid rules "
+                     "mark alert firings (dashed colored: resolutions), "
+                     "dashed gray rules mark injected faults.</p>")
+        for name, points in series.items():
+            svg = _svg_timeline(name, points, alerts, faults)
+            if svg:
+                parts.append(svg)
+    if bundles:
+        parts.append("<h2>Postmortem bundles</h2>")
+        parts.append(_html_table(
+            ["file", "reason", "ts", "ring events", "events seen"],
+            [[name, b.get("reason", "?"), _fmt(b.get("ts", "?")),
+              str(len(b.get("events", []))), _fmt(b.get("n_events_seen", 0))]
+             for name, b in bundles]))
+    parts.append("</body></html>")
+    return "\n".join(parts) + "\n"
+
+
+# ----------------------------------------------------------------------------
+# CLI
+# ----------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python tools/obs_report.py",
+        description="Render repro.obs artifacts into one dashboard "
+                    "(HTML or markdown, no dependencies).")
+    ap.add_argument("--trace", default="", help="Perfetto trace JSON")
+    ap.add_argument("--metrics", default="", help="metrics registry dump")
+    ap.add_argument("--alerts", default="", help="Watchtower alert JSONL")
+    ap.add_argument("--report", default="", help="gated report JSON")
+    ap.add_argument("--postmortems", default="",
+                    help="directory of flight-recorder bundles")
+    ap.add_argument("--out", required=True, help="output file")
+    ap.add_argument("--format", choices=("html", "md"), default="",
+                    help="default: inferred from --out extension")
+    ap.add_argument("--title", default="repro.obs run report")
+    args = ap.parse_args(argv)
+
+    fmt = args.format or ("md" if args.out.endswith((".md", ".markdown"))
+                          else "html")
+    try:
+        report = _load(args.report)
+        metrics = _load(args.metrics)
+        trace = _load(args.trace)
+        alerts_head, alerts = _load_alerts(args.alerts)
+        bundles = _load_postmortems(args.postmortems)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"obs_report: cannot read inputs: {e}", file=sys.stderr)
+        return 2
+    if not any([report, metrics, trace, alerts_head, alerts, bundles]):
+        print("obs_report: no inputs given (pass at least one of --trace/"
+              "--metrics/--alerts/--report/--postmortems)", file=sys.stderr)
+        return 2
+
+    render = render_md if fmt == "md" else render_html
+    text = render(args.title, report, metrics, alerts_head, alerts, trace,
+                  bundles)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    tmp = args.out + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, args.out)
+    n_alerts = len(alerts)
+    print(f"obs_report: wrote {args.out} ({fmt}, {n_alerts} alert "
+          f"transitions, {len(bundles)} postmortems)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,9 +1,15 @@
 #!/usr/bin/env python3
-"""Validate Chrome/Perfetto trace-event JSON produced by ``repro.obs``.
+"""Validate ``repro.obs`` artifacts: traces, metrics, alerts, postmortems.
 
     python tools/trace_check.py out.json [more.json ...]
 
-Checks (exit 0 = every file valid, 1 = a violation, 2 = unreadable/usage):
+The artifact kind is detected from the document shape — Chrome/Perfetto
+trace (``traceEvents``), metrics registry dump (``counters``/``gauges``/
+``histograms``), Watchtower postmortem bundle (``kind: postmortem``), and
+alert JSONL (newline-delimited records with an ``alerts`` header line) —
+and each gets its own schema-version + invariant checks.
+
+Trace checks (exit 0 = every file valid, 1 = a violation, 2 = unreadable):
 
   * top-level schema: a ``traceEvents`` array plus the ``otherData`` clock
     stamp written by :class:`repro.obs.trace.Tracer`;
@@ -106,29 +112,179 @@ def check_events(events: List[Dict], errors: List[str]) -> None:
                           "never closed")
 
 
+METRICS_SCHEMA_VERSION = 1   # repro.obs.metrics.METRICS_SCHEMA_VERSION
+ALERTS_SCHEMA_VERSION = 1    # repro.obs.watch.ALERTS_SCHEMA_VERSION
+POSTMORTEM_SCHEMA_VERSION = 1  # repro.obs.recorder.POSTMORTEM_SCHEMA_VERSION
+
+ALERT_STATES = {"firing", "resolved"}
+
+
+def _check_schema(doc: Dict, want: int, what: str, errors: List[str]) -> None:
+    got = doc.get("schema_version")
+    if got != want:
+        errors.append(f"{what} schema_version must be {want}, got {got!r}")
+
+
+def check_metrics(doc: Dict, errors: List[str]) -> int:
+    """Metrics registry dump: three name->scalar/dict sections."""
+    _check_schema(doc, METRICS_SCHEMA_VERSION, "metrics", errors)
+    n = 0
+    for section, leaf in (("counters", (int, float)),
+                          ("gauges", (int, float)),
+                          ("histograms", dict)):
+        block = doc.get(section)
+        if not isinstance(block, dict):
+            errors.append(f"metrics section {section!r} missing or not "
+                          "an object")
+            continue
+        n += len(block)
+        for name, v in block.items():
+            if not isinstance(v, leaf) or isinstance(v, bool):
+                errors.append(f"metrics {section}[{name!r}]: expected "
+                              f"{leaf}, got {type(v).__name__}")
+            elif section == "histograms":
+                for key in ("count", "p50", "p99"):
+                    if key not in v:
+                        errors.append(f"metrics histograms[{name!r}] "
+                                      f"missing {key!r}")
+    return n
+
+
+def check_postmortem(doc: Dict, errors: List[str]) -> int:
+    """Flight-recorder bundle: reason, int ts, sorted (ts, seq) events."""
+    _check_schema(doc, POSTMORTEM_SCHEMA_VERSION, "postmortem", errors)
+    for key in ("reason", "ts", "events", "n_events_seen"):
+        if key not in doc:
+            errors.append(f"postmortem missing {key!r}")
+    if not isinstance(doc.get("ts", 0), int) or doc.get("ts", 0) < 0:
+        errors.append(f"postmortem ts must be a non-negative integer, "
+                      f"got {doc.get('ts')!r}")
+    events = doc.get("events", [])
+    if not isinstance(events, list):
+        errors.append("postmortem events is not an array")
+        return 0
+    last = None
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict) or "ts" not in ev:
+            errors.append(f"events[{i}]: expected a trace event with 'ts'")
+            continue
+        ts = ev["ts"]
+        if not isinstance(ts, int) or ts < 0:
+            errors.append(f"events[{i}]: ts must be a non-negative "
+                          f"integer, got {ts!r}")
+            continue
+        if last is not None and ts < last:
+            errors.append(f"events[{i}]: ts {ts} < previous {last} "
+                          "(ring must dump sorted)")
+        last = ts
+    n_seen = doc.get("n_events_seen")
+    if isinstance(n_seen, int) and n_seen < len(events):
+        errors.append(f"n_events_seen {n_seen} < {len(events)} events in "
+                      "the bundle (ring bound violated)")
+    return len(events)
+
+
+def check_alerts(lines: List[Dict], errors: List[str]) -> int:
+    """Watchtower JSONL: an ``alerts`` header then (ts, seq)-sorted
+    firing/resolved transitions."""
+    if not lines:
+        errors.append("empty alert log (expected at least a header line)")
+        return 0
+    head = lines[0]
+    if not isinstance(head, dict) or head.get("kind") != "alerts":
+        errors.append("first line is not an alerts header "
+                      "(kind: 'alerts')")
+    else:
+        _check_schema(head, ALERTS_SCHEMA_VERSION, "alerts", errors)
+        for key in ("clock", "unit_us", "n_rules"):
+            if key not in head:
+                errors.append(f"alerts header missing {key!r}")
+    last = None
+    for i, ev in enumerate(lines[1:], 1):
+        where = f"line[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        for key in ("ts", "seq", "rule", "state", "metric"):
+            if key not in ev:
+                errors.append(f"{where}: missing {key!r}")
+        ts = ev.get("ts")
+        if not isinstance(ts, int) or ts < 0:
+            errors.append(f"{where}: ts must be a non-negative integer, "
+                          f"got {ts!r}")
+            continue
+        if ev.get("state") not in ALERT_STATES:
+            errors.append(f"{where}: state must be one of "
+                          f"{sorted(ALERT_STATES)}, got {ev.get('state')!r}")
+        key = (ts, ev.get("seq", 0))
+        if last is not None and key < last:
+            errors.append(f"{where}: (ts, seq) {key} < previous {last} "
+                          "(alert log must be sorted)")
+        last = key
+    return len(lines) - 1
+
+
 def check_file(path: str) -> List[str]:
     errors: List[str] = []
     with open(path) as f:
-        doc = json.load(f)
-    if not isinstance(doc, dict) or "traceEvents" not in doc:
-        return [f"{path}: not a trace-event JSON object with 'traceEvents'"]
-    other = doc.get("otherData")
-    if not isinstance(other, dict) or "clock" not in other \
-            or "schema_version" not in other:
-        errors.append(f"{path}: missing otherData clock/schema_version "
-                      "stamp (not produced by repro.obs?)")
-    events = doc["traceEvents"]
-    if not isinstance(events, list):
-        return [f"{path}: traceEvents is not an array"]
-    check_events(events, errors)
+        text = f.read()
+    try:
+        doc = json.loads(text)
+    except json.JSONDecodeError:
+        # not one JSON document: alert JSONL (one record per line)
+        lines = [json.loads(ln) for ln in text.splitlines() if ln.strip()]
+        check_alerts(lines, errors)
+        return [f"{path}: {e}" for e in errors]
+    if isinstance(doc, dict) and "traceEvents" in doc:
+        other = doc.get("otherData")
+        if not isinstance(other, dict) or "clock" not in other \
+                or "schema_version" not in other:
+            errors.append("missing otherData clock/schema_version "
+                          "stamp (not produced by repro.obs?)")
+        events = doc["traceEvents"]
+        if not isinstance(events, list):
+            return [f"{path}: traceEvents is not an array"]
+        check_events(events, errors)
+    elif isinstance(doc, dict) and doc.get("kind") == "postmortem":
+        check_postmortem(doc, errors)
+    elif isinstance(doc, dict) and "counters" in doc and "gauges" in doc:
+        check_metrics(doc, errors)
+    elif isinstance(doc, dict) and doc.get("kind") == "alerts":
+        # a single-line alert log still parses as one JSON value only if
+        # it has no events; treat the header alone as a valid empty log
+        check_alerts([doc], errors)
+    else:
+        return [f"{path}: unrecognized obs artifact (expected a trace, "
+                "metrics dump, alert JSONL, or postmortem bundle)"]
     return [f"{path}: {e}" for e in errors]
+
+
+def _describe(path: str) -> str:
+    with open(path) as f:
+        text = f.read()
+    try:
+        doc = json.loads(text)
+    except json.JSONDecodeError:
+        n = sum(1 for ln in text.splitlines() if ln.strip()) - 1
+        return f"alert log, {n} events"
+    if isinstance(doc, dict) and "traceEvents" in doc:
+        return f"trace, {len(doc['traceEvents'])} events"
+    if isinstance(doc, dict) and doc.get("kind") == "postmortem":
+        return (f"postmortem {doc.get('reason', '?')!r}, "
+                f"{len(doc.get('events', []))} ring events")
+    if isinstance(doc, dict) and "counters" in doc:
+        n = sum(len(doc.get(s, {}))
+                for s in ("counters", "gauges", "histograms"))
+        return f"metrics, {n} streams"
+    return "alert log, 0 events"
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python tools/trace_check.py",
-        description="Validate repro.obs Chrome/Perfetto trace JSON.")
-    ap.add_argument("traces", nargs="+", help="trace JSON files to check")
+        description="Validate repro.obs artifacts (traces, metrics dumps, "
+                    "alert JSONL, postmortem bundles).")
+    ap.add_argument("traces", nargs="+", help="obs artifact files to check")
     args = ap.parse_args(argv)
     failed = False
     for path in args.traces:
@@ -143,9 +299,7 @@ def main(argv=None) -> int:
             for e in errors:
                 print(e, file=sys.stderr)
         else:
-            with open(path) as f:
-                n = len(json.load(f)["traceEvents"])
-            print(f"{path}: OK ({n} events)")
+            print(f"{path}: OK ({_describe(path)})")
     return 1 if failed else 0
 
 
